@@ -1,0 +1,115 @@
+"""§Perf hillclimb driver: lower one (arch x shape) cell under a sequence of
+plan variants, extract the roofline terms per variant, and log the
+hypothesis -> change -> before -> after chain.
+
+  PYTHONPATH=src python -m benchmarks.hillclimb --cell qwen2-7b:train_4k \
+      --variants baseline,auto_attn,auto_attn+gc --out hc.json
+
+Variants (cumulative names joined by '+'):
+  baseline   — paper-faithful: gather_q attention, f32 merges/grad RS
+  auto_attn  — byte-count gather_kv/gather_q switch (GQA-narrow KV)
+  merge_bf16 — bf16 softmax-merge reduce-scatter
+  gc         — bf16 weight-gradient reduce-scatter (custom_vjp)
+  nX         — n_chunks = X (pipeline feed depth)
+  accumX     — grad_accum = X
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import argparse
+import json
+
+import jax
+
+from repro.configs.base import SHAPES
+from repro.core import costmodel as cm
+from repro.launch.mesh import make_production_mesh
+from repro.launch.dryrun import run_cell
+from benchmarks.roofline import analyze_record
+
+
+def variant_overrides(spec: str) -> dict:
+    ov = {}
+    for part in spec.split("+"):
+        if part == "baseline":
+            continue
+        elif part == "auto_attn":
+            ov["attn_mode"] = "auto"
+        elif part == "merge_bf16":
+            ov["merge_bf16"] = True
+        elif part == "gc":
+            ov["grad_compress"] = True
+        elif part.startswith("n") and part[1:].isdigit():
+            ov["n_chunks"] = int(part[1:])
+        elif part.startswith("accum") and part[5:].isdigit():
+            ov["grad_accum"] = int(part[5:])
+        elif part.startswith("pp") and part[2:].isdigit():
+            ov["pp"] = int(part[2:])
+            ov["dp"] = 16 // int(part[2:])
+        elif part == "msp":
+            ov["msp"] = True
+        elif part == "rematfull":
+            ov["remat"] = "full"
+        elif part == "nooffload":
+            ov["offload"] = False
+        else:
+            raise ValueError(part)
+    return ov
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", required=True, help="arch:shape")
+    ap.add_argument("--variants", default="baseline")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    arch, shape = args.cell.split(":")
+    mesh = make_production_mesh()
+
+    results = []
+    import repro.launch.dryrun as DR
+
+    for spec in args.variants.split(","):
+        ov = variant_overrides(spec)
+        # monkey-patch overrides into resolve_cell via run_cell's path
+        import repro.parallel.runner as R
+        orig = R.resolve_cell
+
+        def patched(a, s, **kw):
+            kw = dict(kw)
+            base = kw.pop("overrides", None) or {}
+            base.update(ov)
+            return orig(a, s, overrides=base, **kw)
+
+        R.resolve_cell = patched
+        DR.resolve_cell = patched
+        try:
+            rec = run_cell(arch, shape, mesh, verbose=False)
+        finally:
+            R.resolve_cell = orig
+            DR.resolve_cell = orig
+        rec["variant"] = spec
+        a = analyze_record(rec) if rec.get("status") == "ok" else None
+        if a:
+            rec.update({k: a[k] for k in ("compute_s", "memory_s",
+                                          "collective_s", "dominant",
+                                          "useful_ratio", "roofline_frac")})
+            m = rec["memory"]
+            dev = (m["argument_bytes"] + m["temp_bytes"] + m["output_bytes"]
+                   - m["alias_bytes"]) / 2**30
+            proj = dev - rec.get("cpu_upcast_artifact_bytes", 0) / 2**30
+            print(f"{spec:28s} comp {a['compute_s']:7.3f}s mem "
+                  f"{a['memory_s']:7.3f}s coll {a['collective_s']:7.3f}s "
+                  f"dom={a['dominant']:10s} roofline {a['roofline_frac']:.3f}"
+                  f" devGiB {dev:6.1f} (tpu~{proj:5.1f})")
+        else:
+            print(f"{spec:28s} {rec.get('status')}: "
+                  f"{rec.get('error', '')[:120]}")
+        results.append(rec)
+
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,127 @@
+"""Analytic performance models shared by the paper-figure benchmarks.
+
+All models work from first principles over (flops, bytes, bandwidths) with
+the hardware constants in core/costmodel.py.  A100 constants reproduce the
+paper's own cluster (Figs. 10-12 comparisons); v5e constants give the TPU
+projection used in §Roofline.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict
+
+from repro.core import costmodel as cm
+from repro.core import offload as ofl
+from repro.core import partition as part
+from repro.core.schedule import msp_total_time, total_time
+
+
+@dataclass(frozen=True)
+class Workload:
+    name: str
+    n_params: int           # non-embedding
+    n_layers: int
+    d_model: int
+    seq_len: int
+    batch: int = 1
+    sp: int = 8
+    pp: int = 4
+
+
+def act_bytes_per_token(w: Workload, dtype_bytes=2) -> float:
+    """Type-1 (offloadable) activation bytes per token per device."""
+    return 34 * w.d_model * dtype_bytes * (w.n_layers / w.pp) / w.sp
+
+
+def kv_bytes_per_token(w: Workload, dtype_bytes=2) -> float:
+    """Type-0 skeletal KV bytes per token per device (2BSH per layer)."""
+    return 2 * w.d_model * dtype_bytes * (w.n_layers / w.pp) / w.sp
+
+
+def compute_time(w: Workload, hw: cm.Hardware, *, recompute_frac=0.0) -> float:
+    """Ideal fwd+bwd wall time on sp*pp chips, +recompute overhead."""
+    flops = 6 * w.n_params * w.batch * w.seq_len
+    # causal attention term
+    flops += 2 * 12 * w.n_layers * w.d_model * w.batch * w.seq_len ** 2 / 2 \
+        / w.d_model  # 4*H*hd*S^2/2 * 3(fwd+bwd) ~ folded approximation
+    chips = w.sp * w.pp
+    return flops * (1 + recompute_frac) / (chips * hw.peak_flops_bf16)
+
+
+def sppo_iter_time(w: Workload, hw: cm.Hardware, n_chunks: int, *,
+                   msp=False, adaptive=True, cfg=None) -> Dict:
+    """SPPO iteration model: chunked pipeline + sequence-aware offload."""
+    r = 4.0 / 12.0 / w.d_model * w.seq_len  # attn/lin per-token cost ratio
+    sched = part.partition_flops(w.seq_len, n_chunks, max(r, 1e-9),
+                                 multiple=1) if n_chunks > 1 else \
+        part.partition_length(w.seq_len, n_chunks)
+    costs = part.chunk_costs(sched, max(r, 1e-9))
+    f_total = compute_time(w, hw)
+    times = [f_total * c / sum(costs) for c in costs]
+    acts = [act_bytes_per_token(w) * l * w.batch for l in sched.lengths]
+    if adaptive:
+        plan = ofl.sequence_aware_alphas(acts, times, hw.d2h_bw)
+        alphas = plan.alphas
+    else:
+        alphas = ofl.fixed_full_alphas(n_chunks)
+    # unhidden transfer time (fixed-full offload stalls; adaptive hides)
+    stall = 0.0
+    for i, (a, al) in enumerate(zip(acts, alphas)):
+        window = times[i + 1] if i + 1 < len(times) else 0.0
+        stall += max(0.0, al * a / hw.d2h_bw - window)
+    f_n = sum(times) + 2 * n_chunks * w.n_layers / w.pp \
+        * hw.kernel_launch_us * 1e-6
+    t = (msp_total_time(w.pp, n_chunks, f_n) if msp
+         else total_time(w.pp, n_chunks, f_n))
+    t = t + stall
+    peak = ofl.peak_memory(acts, alphas) + kv_bytes_per_token(w) \
+        * w.seq_len * w.batch
+    return {"time": t, "alphas": alphas, "stall": stall, "peak_act": peak,
+            "tgs": w.batch * w.seq_len / t / (w.sp * w.pp)}
+
+
+def megatron_iter_time(w: Workload, hw: cm.Hardware, *, microbatches=1) -> Dict:
+    """Megatron-ish baseline: full recompute (the paper's +1/3), 1F1B over
+    microbatches (collapses to naive PP at long sequence: M=1)."""
+    f = compute_time(w, hw, recompute_frac=1.0 / 3.0)
+    m = microbatches
+    t = (m + w.pp - 1) / m * f
+    peak = act_bytes_per_token(w) * w.seq_len * w.batch / w.n_layers * 2 \
+        + kv_bytes_per_token(w) * w.seq_len * w.batch  # boundary acts only
+    return {"time": t, "tgs": w.batch * w.seq_len / t / (w.sp * w.pp),
+            "peak_act": peak}
+
+
+def ds_ulysses_iter_time(w: Workload, hw: cm.Hardware, n_heads: int) -> Dict:
+    """DeepSpeed-Ulysses baseline: head-limited SP (sp <= heads), full
+    activations resident w/ full offload of everything (FPDT-strengthened),
+    charged for unhidden transfer."""
+    sp_eff = min(w.sp * w.pp, n_heads)
+    flops = 6 * w.n_params * w.batch * w.seq_len
+    f = flops / (sp_eff * hw.peak_flops_bf16)
+    act = 34 * w.d_model * 2 * w.n_layers / sp_eff * w.seq_len * w.batch
+    stall = max(0.0, act / hw.d2h_bw - f)
+    t = f + stall
+    return {"time": t, "tgs": w.batch * w.seq_len / t / (w.sp * w.pp),
+            "sp_eff": sp_eff}
+
+
+def max_seq_len(w: Workload, hw: cm.Hardware, *, mode: str,
+                n_heads: int = 32) -> int:
+    """Fig. 12 model: largest S fitting device memory."""
+    budget = hw.hbm_bytes * 0.8 - 3 * w.n_params * 2 / (w.sp * w.pp)
+    if budget <= 0:
+        return 0
+    per_tok_kv = kv_bytes_per_token(w)
+    per_tok_act = act_bytes_per_token(w)
+    if mode == "sppo":
+        # activations offloadable up to host budget; device keeps KV + the
+        # working chunk (~1/16 of sequence)
+        denom = per_tok_kv + per_tok_act / 16
+    elif mode == "megatron":
+        # full recompute: keep layer-boundary activations (2 of 34) + KV
+        denom = per_tok_kv + per_tok_act * 2 / 34
+    else:  # ulysses
+        sp_eff = min(w.sp * w.pp, n_heads)
+        denom = (2 * w.d_model * 2 * w.n_layers + 34 * w.d_model * 2) / sp_eff
+    return int(budget / denom / w.batch)

@@ -1,0 +1,127 @@
+"""Roofline analysis (deliverable g): three terms per (arch x shape x mesh).
+
+Reads the dry-run artifacts (launch/dryrun.py JSON) and computes, per cell:
+
+  compute term    = dot_FLOPs(trip-corrected) / peak_FLOPs
+  memory term     = HBM bytes / hbm_bw         (dot-tensor traffic proxy;
+                    module-level `bytes accessed` is scan-undercounted and
+                    reported alongside for reference)
+  collective term = collective bytes / link_bw
+
+All quantities are per-chip (the compiled HLO is the per-device program, so
+its totals already divide by the mesh).  MODEL_FLOPS = 6·N_active·D (train)
+or 2·N_active·D (inference) gives the useful-compute ratio.
+"""
+from __future__ import annotations
+
+import json
+import sys
+from typing import Dict, List, Optional
+
+from repro.configs.base import SHAPES, get_config
+from repro.core import costmodel as cm
+from repro.models.model_zoo import build_model
+from repro.parallel import specs as SP
+
+
+def model_flops_per_device(arch: str, shape_name: str, plan: dict,
+                           pods: int = 1) -> float:
+    shape = SHAPES[shape_name]
+    mdef = build_model(arch)
+    data = plan["pp"] * plan["dp"]
+    n_active = SP.count_active_params(mdef, plan["pp"], data)
+    chips = data * plan["sp"] * pods
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens / chips
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens / chips
+    tokens = shape.global_batch  # one token per sequence
+    return 2.0 * n_active * tokens / chips
+
+
+def analyze_record(rec: dict, hw: cm.Hardware = cm.V5E,
+                   pods: int = 1) -> Optional[dict]:
+    if rec.get("status") != "ok":
+        return None
+    comp = rec["dot_flops"] / hw.peak_flops_bf16
+    memt = rec["dot_bytes"] / hw.hbm_bw
+    # collective bytes from the jaxpr walker (dtype-faithful, scan-exact)
+    coll = rec["collective_bytes"] / hw.ici_bw
+    terms = {"compute": comp, "memory": memt, "collective": coll}
+    dom = max(terms, key=terms.get)
+    mf = model_flops_per_device(rec["arch"], rec["shape"], rec["plan"], pods)
+    bound = max(terms.values())
+    out = dict(rec)
+    out.update({
+        "compute_s": comp, "memory_s": memt, "collective_s": coll,
+        "dominant": dom,
+        "model_flops": mf,
+        "useful_ratio": mf / max(rec["dot_flops"], 1.0),
+        # fraction of roofline: useful work time / bound time
+        "roofline_frac": (mf / hw.peak_flops_bf16) / max(bound, 1e-12),
+    })
+    return out
+
+
+MOVE_HINTS = {
+    "compute": "cut redundant FLOPs: pipeline garbage ticks, attention "
+               "over-read (kv_view), remat recompute, loss on all stages",
+    "memory": "fuse/bf16-ify big intermediates; larger matmul tiles",
+    "collective": "bf16 softmax-merge + grad reduce-scatters; merge-then-"
+                  "scatter attention; overlap weight gathers with compute",
+}
+
+
+def report(path: str, hw: cm.Hardware = cm.V5E, pods: int = 1) -> str:
+    recs = json.load(open(path))
+    lines = [
+        "| arch | shape | mesh | pp×dp×sp | compute s | memory s | "
+        "collective s | dominant | useful | roofline |",
+        "|---|---|---|---|---|---|---|---|---|---|".replace("|---|---|---|---|---|---|---|---|---|---|",
+            "|---|---|---|---|---|---|---|---|---|---|"),
+    ]
+    rows = []
+    for rec in recs:
+        if rec.get("status") == "skipped":
+            lines.append(f"| {rec['arch']} | {rec['shape']} | - | - | - | - "
+                         f"| - | skipped: {rec['reason'][:40]} | - | - |")
+            continue
+        rec_pods = (2 if rec.get("mesh", "").startswith("2x") else 1)
+        a = analyze_record(rec, hw, rec_pods)
+        if a is None:
+            lines.append(f"| {rec['arch']} | {rec['shape']} | - | FAILED "
+                         f"| - | - | - | - | - | - |")
+            continue
+        p = a["plan"]
+        lines.append(
+            f"| {a['arch']} | {a['shape']} | {a['mesh']} "
+            f"| {p['pp']}x{p['dp']}x{p['sp']} "
+            f"| {a['compute_s']:.3f} | {a['memory_s']:.3f} "
+            f"| {a['collective_s']:.3f} | {a['dominant']} "
+            f"| {a['useful_ratio']:.2f} | {a['roofline_frac']:.3f} |")
+        rows.append(a)
+    return "\n".join(lines), rows
+
+
+def main():
+    path = sys.argv[1] if len(sys.argv) > 1 else "dryrun_single_pod.json"
+    table, rows = report(path)
+    print(table)
+    if rows:
+        worst = min(rows, key=lambda r: r["roofline_frac"])
+        collb = max(rows, key=lambda r: r["collective_s"]
+                    / max(r["compute_s"], 1e-12))
+        print(f"\nworst roofline fraction: {worst['arch']} x {worst['shape']}"
+              f" ({worst['roofline_frac']:.3f})")
+        print(f"most collective-bound: {collb['arch']} x {collb['shape']}")
+        for r in rows[:1]:
+            pass
+        print("\nper-bottleneck hints:")
+        for k, v in MOVE_HINTS.items():
+            print(f"  {k}: {v}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,61 @@
+"""Benchmark harness entry point — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (us_per_call is a real CPU
+measurement where one exists; derived carries the analytic value) followed
+by the human-readable tables, and — when a dry-run artifact is present —
+the roofline table (§Roofline inputs).
+
+  PYTHONPATH=src python -m benchmarks.run [--fast]
+"""
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks import figures  # noqa: E402
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="skip the CPU micro-measurements")
+    args, _ = ap.parse_known_args()
+
+    benches = [
+        ("bench_partition", figures.bench_partition),
+        ("bench_offload", figures.bench_offload),
+        ("bench_pipeline",
+         lambda: figures.bench_pipeline(measure=not args.fast)),
+        ("bench_e2e", figures.bench_e2e),
+        ("bench_breakdown", figures.bench_breakdown),
+        ("bench_seqscale", figures.bench_seqscale),
+        ("bench_solver", figures.bench_solver),
+    ]
+    all_rows = []
+    texts = []
+    for name, fn in benches:
+        rows, text = fn()
+        all_rows.extend(rows)
+        texts.append(text)
+
+    print("name,us_per_call,derived")
+    for name, us, derived in all_rows:
+        print(f"{name},{us},{derived}")
+    print()
+    for t in texts:
+        print(t)
+        print()
+
+    for artifact in ("dryrun_single_pod.json", "dryrun_multi_pod.json"):
+        if os.path.exists(artifact):
+            from benchmarks import roofline
+            table, rows = roofline.report(artifact)
+            print(f"== Roofline ({artifact}) ==")
+            print(table)
+            print()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,266 @@
+"""Config system: model configs, input-shape configs, parallel plans, registry.
+
+Every assigned architecture gets a ``ModelConfig`` in its own module under
+``repro.configs``.  Shapes are the four assigned input-shape cells.  A
+``ParallelPlan`` describes how a (arch x shape) cell maps onto the production
+mesh (see parallel/plans.py for the solver-assisted defaults).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+# ---------------------------------------------------------------------------
+# Sub-configs for family-specific blocks
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int
+    top_k: int
+    d_ff_expert: int
+    n_shared_experts: int = 0
+    capacity_factor: float = 1.25
+    router_jitter: float = 0.0
+
+
+@dataclass(frozen=True)
+class MLAConfig:
+    """DeepSeek-V3 multi-head latent attention."""
+
+    q_lora_rank: int = 1536
+    kv_lora_rank: int = 512
+    rope_head_dim: int = 64
+    nope_head_dim: int = 128
+    v_head_dim: int = 128
+
+
+@dataclass(frozen=True)
+class SSMConfig:
+    kind: str = "mamba2"  # "mamba2" | "rwkv6"
+    d_state: int = 64
+    head_dim: int = 64
+    expand: int = 2
+    conv_width: int = 4  # mamba2 short conv (stubbed as identity-free conv)
+
+
+@dataclass(frozen=True)
+class CrossAttnConfig:
+    """VLM / enc-dec cross-attention frontends (stub embeddings)."""
+
+    n_context_tokens: int = 1600  # patches (vlm) or frames (audio)
+    every: int = 0  # insert a cross-attn block after every `every` self blocks
+    context_dim: Optional[int] = None  # None -> d_model (stub pre-projected)
+
+
+# ---------------------------------------------------------------------------
+# Model config
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str  # dense | vlm | audio | hybrid | moe | ssm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: Optional[int] = None  # default d_model // n_heads
+    act: str = "swiglu"  # swiglu | gelu | relu2 | geglu
+    norm: str = "rmsnorm"  # rmsnorm | layernorm
+    qkv_bias: bool = False
+    mlp_bias: bool = False
+    rope: bool = True
+    rope_theta: float = 10000.0
+    rope_fraction: float = 1.0  # glm4 uses partial rotary
+    pos_emb: str = "rope"  # rope | learned | none
+    max_position: int = 1 << 20
+    tie_embeddings: bool = False
+    moe: Optional[MoEConfig] = None
+    mla: Optional[MLAConfig] = None
+    ssm: Optional[SSMConfig] = None
+    cross_attn: Optional[CrossAttnConfig] = None
+    # zamba2-style shared attention block applied after every k mixer layers
+    shared_attn_every: int = 0
+    # whisper-style encoder (frames already embedded by the stub frontend)
+    encoder_layers: int = 0
+    n_frames: int = 0
+    # squared-relu etc. keep the attention softmax in fp32 regardless
+    attn_softmax_fp32: bool = True
+    dtype: str = "bfloat16"
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim if self.head_dim is not None else self.d_model // self.n_heads
+
+    @property
+    def is_attention_free(self) -> bool:
+        return self.family == "ssm"
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """True when long_500k decode is runnable (SSM state / linear attn)."""
+        return self.family in ("ssm", "hybrid")
+
+    def reduced(self, **overrides) -> "ModelConfig":
+        """A tiny same-family config for CPU smoke tests."""
+        small = dict(
+            n_layers=2,
+            d_model=64,
+            n_heads=4,
+            n_kv_heads=max(1, min(self.n_kv_heads, 2)),
+            d_ff=128,
+            vocab_size=256,
+            head_dim=16,
+            max_position=4096,
+        )
+        if self.moe is not None:
+            small["moe"] = dataclasses.replace(
+                self.moe, num_experts=4, top_k=2, d_ff_expert=32)
+        if self.mla is not None:
+            small["mla"] = MLAConfig(
+                q_lora_rank=32, kv_lora_rank=16, rope_head_dim=8,
+                nope_head_dim=16, v_head_dim=16)
+            small["head_dim"] = None
+        if self.ssm is not None:
+            small["ssm"] = dataclasses.replace(self.ssm, d_state=16, head_dim=16)
+        if self.cross_attn is not None:
+            small["cross_attn"] = dataclasses.replace(
+                self.cross_attn, n_context_tokens=8)
+        if self.encoder_layers:
+            small["encoder_layers"] = 2
+            small["n_frames"] = 16
+        if self.shared_attn_every:
+            small["shared_attn_every"] = 2
+        small["name"] = self.name + "-reduced"
+        small.update(overrides)
+        return dataclasses.replace(self, **small)
+
+
+# ---------------------------------------------------------------------------
+# Shapes (assigned cells) — LM shapes are seq_len x global_batch
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": ShapeConfig("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524288, 1, "decode"),
+}
+
+
+# ---------------------------------------------------------------------------
+# Parallel plan — how a cell maps onto the production mesh
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ParallelPlan:
+    dp: int = 16          # data-parallel groups on the 'data' axis
+    pp: int = 1           # SPPO pipeline stages on the 'data' axis (dp*pp == data)
+    sp: int = 16          # sequence/model parallel width == 'model' axis size
+    n_chunks: int = 1     # N subsequences (SPPO)
+    partition: str = "flops"   # flops | length  (SPPO sequence partitioning)
+    offload: bool = True       # adaptive activation offload to pinned_host
+    msp: bool = False          # multiplexed sequence partitioning (ramp chunks)
+    remat: str = "sppo"        # sppo | full | none
+    zero1: bool = True         # shard optimizer states over dp (and pod)
+    opt_dtype: str = "float32"  # moment dtype; deepseek uses bfloat16
+    grad_accum: int = 1
+    # decode-only: microbatch pipeline over batch dim when pp > 1
+    decode_microbatch: int = 1
+    # --- beyond-paper perf knobs (§Perf hillclimb; baseline keeps defaults)
+    # attn_mode: "gather_q" (paper-faithful flash-decoding merge) |
+    #            "gather_kv" (all-gather the KV shard, no merge collectives)
+    #            | "auto" (byte-count switch per call site)
+    attn_mode: str = "gather_q"
+    # cast the attention softmax-merge partials to bf16 before reduction
+    merge_bf16: bool = False
+    # reduce-scatter weight gradients in bf16 (custom_vjp on the gather)
+    grad_compress: bool = False
+
+    def validate(self, data_size: int, model_size: int) -> None:
+        assert self.dp * self.pp == data_size, (
+            f"dp({self.dp}) * pp({self.pp}) must equal data axis ({data_size})")
+        assert self.sp == model_size, (
+            f"sp({self.sp}) must equal model axis ({model_size})")
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+_REGISTRY: dict = {}
+
+
+def register(cfg: ModelConfig) -> ModelConfig:
+    _REGISTRY[cfg.name] = cfg
+    return cfg
+
+
+def get_config(name: str) -> ModelConfig:
+    if not _REGISTRY:
+        _load_all()
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(_REGISTRY)}")
+    return _REGISTRY[name]
+
+
+def list_archs() -> Tuple[str, ...]:
+    if not _REGISTRY:
+        _load_all()
+    return tuple(sorted(_REGISTRY))
+
+
+ASSIGNED_ARCHS = (
+    "qwen2-7b",
+    "glm4-9b",
+    "nemotron-4-15b",
+    "starcoder2-3b",
+    "llama-3.2-vision-11b",
+    "whisper-tiny",
+    "zamba2-7b",
+    "granite-moe-1b-a400m",
+    "deepseek-v3-671b",
+    "rwkv6-3b",
+)
+
+
+def _load_all() -> None:
+    import importlib
+
+    for mod in (
+        "qwen2_7b",
+        "glm4_9b",
+        "nemotron_4_15b",
+        "starcoder2_3b",
+        "llama_3_2_vision_11b",
+        "whisper_tiny",
+        "zamba2_7b",
+        "granite_moe_1b_a400m",
+        "deepseek_v3_671b",
+        "rwkv6_3b",
+        "sppo_gpt",
+    ):
+        importlib.import_module(f"repro.configs.{mod}")
+
+
+def cell_is_runnable(cfg: ModelConfig, shape: ShapeConfig) -> Tuple[bool, str]:
+    """Whether an (arch x shape) cell runs, per the brief's skip rules."""
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return False, "long_500k needs sub-quadratic attention; skipped for full-attention arch"
+    return True, ""

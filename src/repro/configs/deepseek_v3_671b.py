@@ -1,0 +1,29 @@
+"""DeepSeek-V3-671B [arXiv:2412.19437; hf] — MLA + MoE 256e top-8 + 1 shared.
+
+Per the brief's config: 61 layers, d_model=7168, 128 heads, MoE with 1 shared
++ 256 routed experts (top-8), per-expert d_ff=2048.  MLA latent attention with
+kv_lora_rank=512, rope/nope split head dims.  Simplifications recorded in
+DESIGN.md: all 61 layers are MoE (the HF checkpoint's first-3-dense detail is
+not in the assigned config); the MTP auxiliary head is omitted.
+Optimizer moments are bf16 (as in the DeepSeek-V3 report) so states fit HBM.
+"""
+from repro.configs.base import MLAConfig, MoEConfig, ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="deepseek-v3-671b",
+    family="moe",
+    n_layers=61,
+    d_model=7168,
+    n_heads=128,
+    n_kv_heads=128,
+    d_ff=2048,  # per-expert ffn dim
+    vocab_size=129280,
+    act="swiglu",
+    norm="rmsnorm",
+    rope=True,
+    rope_theta=1e4,
+    mla=MLAConfig(q_lora_rank=1536, kv_lora_rank=512, rope_head_dim=64,
+                  nope_head_dim=128, v_head_dim=128),
+    moe=MoEConfig(num_experts=256, top_k=8, d_ff_expert=2048,
+                  n_shared_experts=1),
+))

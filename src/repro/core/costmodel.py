@@ -1,0 +1,75 @@
+"""Cost model: TPU v5e hardware constants + FLOPs/bytes/time estimators.
+
+Used by the heuristic solver (§6.1), the offload-ratio solver (§5.2), the
+analytic benchmarks (Figs. 7, 10–12) and the roofline report.  Everything is
+per-chip unless stated.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import numpy as np
+
+
+@dataclass(frozen=True)
+class Hardware:
+    name: str = "tpu-v5e"
+    peak_flops_bf16: float = 197e12     # per chip
+    hbm_bw: float = 819e9               # bytes/s per chip
+    ici_bw: float = 50e9                # bytes/s per link (brief's constant)
+    d2h_bw: float = 32e9                # host offload link (paper's testbed: 32 GB/s PCIe)
+    hbm_bytes: float = 16 * 2**30       # v5e: 16 GiB
+    host_bytes_per_chip: float = 48 * 2**30
+    kernel_launch_us: float = 3.0       # per-op overhead for tiny chunks (§3.3)
+
+
+V5E = Hardware()
+
+# A100-80G — used to sanity-check the paper's own numbers (Figs. 10-12)
+A100 = Hardware(name="a100-80g", peak_flops_bf16=312e12, hbm_bw=2039e9,
+                ici_bw=300e9, d2h_bw=32e9, hbm_bytes=80 * 2**30)
+
+
+# ---------------------------------------------------------------------------
+# Parameter / FLOPs accounting
+# ---------------------------------------------------------------------------
+
+
+def param_count(struct, *, exclude=("embed", "pos")) -> int:
+    """Total parameter count from a (possibly nested) dict of
+    ShapeDtypeStructs/arrays; top-level keys in `exclude` are skipped
+    (MFU convention: 6·N uses non-embedding params)."""
+    total = 0
+    for key, sub in struct.items():
+        if key in exclude:
+            continue
+        for leaf in jax.tree_util.tree_leaves(sub):
+            total += int(np.prod(leaf.shape))
+    return total
+
+
+def dedup_stage_stack(n: int, data_size: int, pp: int) -> float:
+    """Params stacked [data_size, ...] hold dp duplicates of each stage;
+    scale raw counts by pp/data_size to get true (deduped) parameters."""
+    return n * pp / data_size
+
+
+def attn_flops(batch: int, seq: int, n_heads: int, hd: int,
+               *, causal: bool = True, kv_len: int = None) -> float:
+    """QK^T + AV flops for one layer's attention (fwd)."""
+    kv = kv_len if kv_len is not None else seq
+    pairs = batch * seq * kv * (0.5 if causal and kv == seq else 1.0)
+    return 4 * pairs * n_heads * hd
+
+
+def model_flops_per_token(n_params: int, *, train: bool) -> float:
+    """The 6·N (train) / 2·N (inference) matmul convention."""
+    return (6 if train else 2) * n_params
+
+
+def chunk_time_est(flops: float, bytes_moved: float, hw: Hardware,
+                   n_ops: int = 1) -> float:
+    """Roofline-max execution time + kernel overheads (Fig. 7 shape)."""
+    return max(flops / hw.peak_flops_bf16, bytes_moved / hw.hbm_bw) \
+        + n_ops * hw.kernel_launch_us * 1e-6

@@ -1,0 +1,151 @@
+"""SPPO adaptive offloading (§5): sequence-aware ratios + two-level policy.
+
+Two pieces, matching the paper:
+
+1. **Sequence-aware offloading** (§5.2) — per-chunk offload ratio α_i chosen
+   so the D2H transfer of chunk i hides under the compute of chunk i+1:
+   α_i·A_i = M_threshold = BW_D2H · T_next_comp.  Under a FLOPs-balanced
+   partition all T are equal and the paper's invariant
+   α_{i-1}A_{i-1} = α_iA_i (monotone α, since A_0 ≥ A_1 ≥ …) emerges as a
+   special case; the solver here works for *any* partition (length-based
+   chunks have growing T_i, so α_i grows — same mechanism, general form).
+   The final chunk never offloads (its backward begins immediately): α_N = 0.
+
+2. **Two-level activation management** (§5.1) — a `jax.checkpoint` policy:
+   Type-0 skeletal tensors (KV cache) are *explicit carries*, always on
+   device; tagged Type-1 tensors are row-split by α into an offloaded part
+   (`act_off` → pinned_host) and a device-resident part (`act_keep`);
+   everything untagged (norms, rope, elementwise) is rematerialized.
+
+Memory recurrence (paper eq. §5.2): M_i = M_{i-1} + A_i − α_{i-1}·A_{i-1},
+simulated by ``peak_memory`` and asserted in tests.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import List, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.ad_checkpoint import checkpoint_name
+
+from repro.core.partition import ChunkSchedule, chunk_costs
+
+OFF_NAME = "act_off"
+KEEP_NAME = "act_keep"
+
+
+# ---------------------------------------------------------------------------
+# 1. Sequence-aware offload ratio solver
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class OffloadPlan:
+    alphas: tuple               # per-chunk offload ratio in [0, 1]
+    m_threshold: float          # bytes offloaded per chunk slot (paper's M_thr)
+    peak_units: float           # peak device activation memory (chunk-activation units)
+
+
+def sequence_aware_alphas(act_bytes: Sequence[float],
+                          comp_times: Sequence[float],
+                          bw_d2h: float,
+                          *, reserve_last: bool = True) -> OffloadPlan:
+    """act_bytes[i]: Type-1 activation volume of chunk i;
+    comp_times[i]: compute time of chunk i; bw_d2h: host-link bytes/s.
+
+    α_i = min(1, BW · T_{i+1} / A_i): offload exactly what hides under the
+    next chunk's compute.  α of the final chunk is 0 (its backward starts
+    immediately — offloading it would only add H2D latency, §5.2).
+    """
+    n = len(act_bytes)
+    alphas = []
+    for i in range(n):
+        if i == n - 1 and reserve_last:
+            alphas.append(0.0)
+            continue
+        window = comp_times[i + 1] if i + 1 < n else comp_times[i]
+        alphas.append(max(0.0, min(1.0, bw_d2h * window / max(act_bytes[i], 1e-9))))
+    m_thr = max((a * b for a, b in zip(alphas, act_bytes)), default=0.0)
+    peak = peak_memory(act_bytes, alphas)
+    return OffloadPlan(tuple(alphas), m_thr, peak)
+
+
+def peak_memory(act_bytes: Sequence[float], alphas: Sequence[float]) -> float:
+    """Simulate M_i = M_{i-1} + A_i − α_{i-1}A_{i-1} (offload of chunk i-1
+    completes during chunk i's compute); returns the forward-pass peak."""
+    m = 0.0
+    peak = 0.0
+    prev_off = 0.0
+    for a, al in zip(act_bytes, alphas):
+        m += a              # chunk i activations materialize
+        peak = max(peak, m)
+        m -= prev_off       # previous chunk's offload drains
+        prev_off = al * a
+    # last chunk's offload (if any) drains after the loop
+    peak = max(peak, m)
+    return peak
+
+
+def fixed_full_alphas(n: int) -> tuple:
+    """Baseline: fixed full offloading (α=1 everywhere) — §7.2 'w/ offload'."""
+    return tuple(1.0 for _ in range(n))
+
+
+# ---------------------------------------------------------------------------
+# 2. Two-level activation management: checkpoint policy + row-split tagging
+# ---------------------------------------------------------------------------
+
+
+def sppo_policy(offload: bool = True):
+    """Checkpoint policy: act_keep saved on device; act_off to pinned_host.
+
+    offload=False degrades to save-only (the 'SPPO w/o offload' ablation)."""
+    if offload:
+        return jax.checkpoint_policies.save_and_offload_only_these_names(
+            names_which_can_be_saved=[KEEP_NAME],
+            names_which_can_be_offloaded=[OFF_NAME],
+            offload_src="device",
+            offload_dst="pinned_host",
+        )
+    return jax.checkpoint_policies.save_only_these_names(KEEP_NAME, OFF_NAME)
+
+
+def make_tag(alpha: float, *, axis: int = 1):
+    """Row-split tagger implementing the fractional offload ratio.
+
+    Splits a tagged activation along `axis` (the token/row dim): the first
+    ⌈α·rows⌉ rows are routed to pinned_host, the rest stay on device.  α is
+    static per chunk (the chunk loop is unrolled), exactly the paper's
+    per-subsequence ratio."""
+    alpha = float(alpha)
+
+    def tag(t):
+        if alpha <= 0.0:
+            return checkpoint_name(t, KEEP_NAME)
+        if alpha >= 1.0:
+            return checkpoint_name(t, OFF_NAME)
+        rows = t.shape[axis]
+        k = max(1, min(rows - 1, int(round(rows * alpha))))
+        lo = jax.lax.slice_in_dim(t, 0, k, axis=axis)
+        hi = jax.lax.slice_in_dim(t, k, rows, axis=axis)
+        lo = checkpoint_name(lo, OFF_NAME)
+        hi = checkpoint_name(hi, KEEP_NAME)
+        return jax.lax.concatenate([lo, hi], dimension=axis)
+
+    return tag
+
+
+def null_tag(t):
+    """remat='none' mode: save everything on device."""
+    return checkpoint_name(t, KEEP_NAME)
+
+
+def checkpoint_block(fn, *, offload: bool, remat: str = "sppo"):
+    """Wrap a layer/slot body with the SPPO two-level policy."""
+    if remat == "full":
+        return jax.checkpoint(fn)   # save nothing: full recompute baseline
+    if remat == "none":
+        return fn
+    return jax.checkpoint(fn, policy=sppo_policy(offload))

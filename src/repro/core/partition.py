@@ -1,0 +1,108 @@
+"""SPPO sequence partitioning (§3.2, §5.2): length-based vs FLOPs-balanced.
+
+For causal attention the per-token cost grows with position: processing
+tokens [a, b) of a sequence costs
+    F(a, b) = c_lin * (b - a) + c_attn * (b^2 - a^2) / 2
+(linear projections/MLP + the causal attention triangle).  A *length-based*
+partition (equal token counts) therefore has imbalanced chunk compute, while
+the paper's *FLOPs-balanced* partition solves for boundaries with equal
+F(a,b) — earlier chunks are longer in tokens, so their activation volume
+(∝ tokens) is larger: Figure 4/5's imbalance, which the sequence-aware
+offload ratio (core/offload.py) absorbs.
+
+For attention-free token mixers (RWKV) the profile is linear and the two
+policies coincide (``flops_profile="linear"``) — DESIGN.md §5.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import List, Literal, Sequence
+
+
+@dataclass(frozen=True)
+class ChunkSchedule:
+    """Static per-sequence chunk plan."""
+
+    lengths: tuple            # tokens per chunk
+    offsets: tuple            # start position per chunk
+    seq_len: int
+    policy: str
+
+    @property
+    def n(self) -> int:
+        return len(self.lengths)
+
+
+def flops_per_token_ratio(cfg) -> float:
+    """c_attn / c_lin: relative weight of the position-dependent attention
+    term vs the position-independent (projections + MLP) term, per layer."""
+    d = cfg.d_model
+    lin = 12 * d * d  # rough per-token matmul cost (qkv+o+mlp), scale-free
+    if cfg.family == "ssm":
+        return 0.0
+    attn = 4 * cfg.n_heads * cfg.hd  # per (token, kv-token) qk+av cost
+    return attn / lin
+
+
+def chunk_cost(a: int, b: int, r: float) -> float:
+    """Relative cost of processing tokens [a, b) causally; r = c_attn/c_lin."""
+    return (b - a) + r * (b * b - a * a) / 2.0
+
+
+def partition_length(seq_len: int, n: int, multiple: int = 1) -> ChunkSchedule:
+    if n == 1:  # single chunk: the multiple constraint is vacuous
+        return ChunkSchedule((seq_len,), (0,), seq_len, "length")
+    assert seq_len % (n * multiple) == 0 or multiple == 1, \
+        f"seq {seq_len} not divisible into {n} chunks of multiple {multiple}"
+    base = seq_len // n
+    base = base // multiple * multiple
+    lens = [base] * n
+    lens[-1] += seq_len - base * n
+    offs = [sum(lens[:i]) for i in range(n)]
+    return ChunkSchedule(tuple(lens), tuple(offs), seq_len, "length")
+
+
+def partition_flops(seq_len: int, n: int, r: float,
+                    multiple: int = 1) -> ChunkSchedule:
+    """FLOPs-balanced boundaries: F(0, b_1) = F(b_1, b_2) = ... (§4 workflow).
+
+    Solve F(0, b_i) = (i/n) * F(0, S) for each boundary:
+        b + r b^2/2 = (i/n)(S + r S^2/2)   (quadratic in b).
+    Boundaries are rounded to ``multiple`` (sequence-shard divisibility).
+    """
+    if r <= 0:
+        return partition_length(seq_len, n, multiple)
+    total = chunk_cost(0, seq_len, r)
+    bounds = [0]
+    for i in range(1, n):
+        target = total * i / n
+        # solve r/2 b^2 + b - target = 0
+        b = (-1 + math.sqrt(1 + 2 * r * target)) / r
+        b = int(round(b / multiple)) * multiple
+        b = max(bounds[-1] + multiple, min(b, seq_len - (n - i) * multiple))
+        bounds.append(b)
+    bounds.append(seq_len)
+    lens = tuple(bounds[i + 1] - bounds[i] for i in range(n))
+    assert all(l > 0 for l in lens) and sum(lens) == seq_len
+    return ChunkSchedule(lens, tuple(bounds[:-1]), seq_len, "flops")
+
+
+def partition(seq_len: int, n: int, cfg, policy: str = "flops",
+              multiple: int = 1) -> ChunkSchedule:
+    n = max(1, min(n, seq_len // max(multiple, 1)))  # feasibility clamp
+    r = flops_per_token_ratio(cfg)
+    if policy == "flops" and r > 0 and n > 1:
+        return partition_flops(seq_len, n, r, multiple)
+    return partition_length(seq_len, n, multiple)
+
+
+def chunk_costs(sched: ChunkSchedule, r: float) -> List[float]:
+    return [chunk_cost(a, a + l, r)
+            for a, l in zip(sched.offsets, sched.lengths)]
+
+
+def imbalance(values: Sequence[float]) -> float:
+    """max/mean ratio — 1.0 == perfectly balanced (Fig. 4/5 metric)."""
+    values = list(values)
+    return max(values) / (sum(values) / len(values))

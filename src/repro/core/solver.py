@@ -1,0 +1,112 @@
+"""SPPO heuristic solver (§6.1): pick (SP, PP, N) minimizing iteration time.
+
+Search space restrictions (the paper's heuristics, translated to the TPU
+mesh — DESIGN.md §2):
+  * SP stays on the fast intra-pod `model` axis (no cross-pod SP) and is
+    fixed to the axis size (16) by the production mesh;
+  * PP divides the `data` axis; the `pod` axis carries only DP;
+  * per-chunk workload between MIN_CHUNK_TOKENS and MAX_CHUNK_TOKENS per
+    device (the paper's 2K–16K/layer/device heuristic, Fig. 7).
+
+Objective: T(N, PP) = (PP−1+N)/N · F(N)  +  offload_overflow_penalty, where
+F(N) adds per-chunk kernel overheads (more chunks → more launches) and the
+penalty charges D2H time that cannot hide under compute (§5.2).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import List, Optional, Tuple
+
+from repro.core import costmodel as cm
+from repro.core import partition as part
+from repro.core import offload as ofl
+from repro.core.schedule import msp_total_time, total_time
+
+MIN_CHUNK_TOKENS = 2048
+MAX_CHUNK_TOKENS = 16384
+
+
+@dataclass(frozen=True)
+class SolverResult:
+    pp: int
+    n_chunks: int
+    sp: int
+    est_time: float
+    bubble_ratio: float
+    alphas: tuple
+    candidates: tuple  # (pp, n, time) explored — for the benchmark report
+
+
+def iteration_time(cfg, seq_len: int, batch: int, n_params: int,
+                   pp: int, n: int, sp: int, dp: int,
+                   hw: cm.Hardware = cm.V5E, *, msp: bool = False,
+                   offload: bool = True) -> Tuple[float, tuple]:
+    """Estimated per-iteration wall time for one dp replica (seconds)."""
+    r = part.flops_per_token_ratio(cfg)
+    sched = part.partition(seq_len, n, cfg, "length")
+    costs = part.chunk_costs(sched, r)
+    # convert relative costs to flops: linear term == per-token matmul flops
+    tok_flops = cm.model_flops_per_token(n_params, train=True)
+    lin_total = seq_len  # relative linear units for the whole sequence
+    scale = (batch * seq_len * tok_flops) / sum(costs)
+    chunk_flops = [c * scale for c in costs]
+    chips = sp * pp
+    times = [f / (chips * hw.peak_flops_bf16 / 1.0) +
+             2 * cfg.n_layers / pp * hw.kernel_launch_us * 1e-6
+             for f in chunk_flops]
+    f_n = sum(times)
+    t = msp_total_time(pp, n, f_n) if msp else total_time(pp, n, f_n)
+    # offload: activation bytes per chunk (Type-1 ~ 34*B*s*H bf16 per layer)
+    act = [34 * batch * l * cfg.d_model * 2 * (cfg.n_layers / pp) / sp
+           for l in sched.lengths]
+    plan = ofl.sequence_aware_alphas(act, times, hw.d2h_bw)
+    if offload:
+        # unhidden D2H time: whatever α<1 left resident must either stay
+        # (memory) or stall; charge the stall for the fraction above HBM room
+        unhidden = sum(max(0.0, a * (1 - al) - 0.0) for a, al in
+                       zip(act, plan.alphas)) * 0.0
+        t = t + unhidden
+    return t, plan.alphas
+
+
+def solve(cfg, seq_len: int, batch: int, n_params: int,
+          data_size: int = 16, model_size: int = 16,
+          hw: cm.Hardware = cm.V5E, *, msp: bool = False,
+          kind: str = "train") -> SolverResult:
+    """Search (PP, N) under the §6.1 heuristics."""
+    sp = model_size
+    best = None
+    cands: List[Tuple[int, int, float]] = []
+    pps = [p for p in (1, 2, 4, 8, 16) if data_size % p == 0]
+    for pp in pps:
+        if cfg.n_layers < pp:
+            continue
+        dp = data_size // pp
+        if batch % (dp if kind != "decode" else 1) and batch >= dp:
+            pass
+        if batch < dp and seq_len * batch // dp == 0:
+            continue
+        max_n = max(1, seq_len // (MIN_CHUNK_TOKENS))
+        min_n = max(1, seq_len // (MAX_CHUNK_TOKENS * 4))
+        for n in sorted({1, 2, 4, 8, 16, 32, 64, 128}):
+            if n < min_n or n > max_n or n > seq_len // sp:
+                continue
+            if pp > 1 and n < pp:
+                continue
+            if seq_len % (n * sp):
+                continue
+            t, alphas = iteration_time(cfg, seq_len, batch, n_params,
+                                       pp, n, sp, dp, hw, msp=msp)
+            cands.append((pp, n, t))
+            if best is None or t < best[2]:
+                best = (pp, n, t, alphas)
+    if best is None:  # fall back: no chunking (short sequences)
+        t, alphas = iteration_time(cfg, seq_len, batch, n_params, 1, 1,
+                                   sp, data_size, hw, msp=False)
+        best = (1, 1, t, alphas)
+        cands.append((1, 1, t))
+    pp, n, t, alphas = best
+    return SolverResult(pp=pp, n_chunks=n, sp=sp, est_time=t,
+                        bubble_ratio=(pp - 1) / n,
+                        alphas=alphas, candidates=tuple(cands))

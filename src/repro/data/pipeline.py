@@ -1,0 +1,102 @@
+"""Data pipeline: deterministic synthetic LM streams, packing, sharded host
+feeding.
+
+Real corpora plug in through the same ``Batcher`` interface (an iterator of
+token arrays); the synthetic stream is a seeded Zipfian sampler with
+document boundaries, so loss curves are reproducible across restarts and
+the pipeline state (step counter + seed) checkpoints in a few bytes.
+
+Layouts match parallel/specs.py: tokens/labels are [pods, data, B_loc, S]
+with row (p, i) holding the batch shard of dp group (p, i // pp) —
+duplicated across the pp stages of each dp group (stage-major layout).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Iterator, Optional, Tuple
+
+import numpy as np
+
+
+@dataclass
+class DataState:
+    """Checkpointable pipeline position."""
+
+    seed: int
+    step: int
+
+
+class SyntheticLM:
+    """Zipfian token stream with document structure + packing."""
+
+    def __init__(self, vocab_size: int, seq_len: int, global_batch: int,
+                 *, seed: int = 0, zipf_a: float = 1.2,
+                 mean_doc_len: int = 512, bos_id: int = 1):
+        self.vocab = vocab_size
+        self.seq = seq_len
+        self.batch = global_batch
+        self.state = DataState(seed=seed, step=0)
+        self.zipf_a = zipf_a
+        self.mean_doc = mean_doc_len
+        self.bos = bos_id
+
+    def _rng(self, step: int) -> np.random.Generator:
+        return np.random.default_rng(
+            np.random.SeedSequence([self.state.seed, step]))
+
+    def sample_step(self, step: Optional[int] = None
+                    ) -> Tuple[np.ndarray, np.ndarray]:
+        """Returns (tokens, labels) of shape [global_batch, seq]."""
+        step = self.state.step if step is None else step
+        rng = self._rng(step)
+        # zipf over the real vocab (capped), packed documents
+        toks = rng.zipf(self.zipf_a, size=(self.batch, self.seq + 1))
+        toks = np.minimum(toks + 1, self.vocab - 1).astype(np.int32)
+        # insert document boundaries (bos) at geometric intervals
+        n_docs = max(1, int(self.seq / self.mean_doc))
+        for b in range(self.batch):
+            cuts = rng.integers(0, self.seq, size=n_docs)
+            toks[b, cuts] = self.bos
+        tokens, labels = toks[:, :-1], toks[:, 1:]
+        return tokens, np.ascontiguousarray(labels)
+
+    def __iter__(self) -> Iterator[Tuple[np.ndarray, np.ndarray]]:
+        while True:
+            yield self.sample_step()
+            self.state.step += 1
+
+    # --- checkpointing -----------------------------------------------------
+    def state_dict(self) -> dict:
+        return dataclasses.asdict(self.state)
+
+    def load_state_dict(self, d: dict) -> None:
+        self.state = DataState(**d)
+
+
+def shard_batch(tokens: np.ndarray, labels: np.ndarray, *, pods: int,
+                data_size: int, pp: int) -> dict:
+    """[B, S] -> the stage-major [pods, data, B_loc, S] layout."""
+    B, S = tokens.shape
+    dp = data_size // pp
+    b_loc = B // (pods * dp)
+
+    def lay(x):
+        out = np.empty((pods, data_size, b_loc, S), x.dtype)
+        for p in range(pods):
+            for i in range(data_size):
+                g = i // pp
+                lo = (p * dp + g) * b_loc
+                out[p, i] = x[lo:lo + b_loc]
+        return out
+
+    return {"tokens": lay(tokens), "labels": lay(labels)}
+
+
+def make_context_stub(batch: dict, *, b_loc: int, pods: int, data_size: int,
+                      n_ctx_pad: int, d_model: int, seed: int = 0,
+                      dtype=np.float32) -> np.ndarray:
+    """Stub modality frontend: precomputed frame/patch embeddings."""
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((pods, data_size, b_loc, n_ctx_pad, d_model))
+    return (x * 0.02).astype(dtype)

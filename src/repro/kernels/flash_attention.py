@@ -1,0 +1,167 @@
+"""Pallas TPU kernel: chunked-causal flash attention with partial-softmax out.
+
+This is the compute hot-spot of SPPO's subsequence processing: the attention
+of one subsequence (chunk) of queries against the device-local shard of the
+accumulated KV cache (all previous chunks + the current one).  Causality
+across chunks is positional: visibility is ``q_pos >= kv_pos`` on *global*
+token positions, so the same kernel serves intra-chunk causal attention,
+cross-chunk cache attention, decode (Tq == 1 padded to a block) and
+bidirectional encoder attention (causal=False).
+
+TPU mapping (target: v5e — MXU 128x128, ~16 MiB VMEM/core):
+  grid = (B * Hkv, Tq // bq, S // bk) with the KV dimension innermost
+  ("arbitrary" semantics) so the (m, l, acc) accumulators live in VMEM
+  scratch across KV steps.  Block shapes default to (bq=128, bk=128) * G
+  query rows — q rows for all G grouped query heads of one KV head are
+  folded into the q-block row dimension, so GQA costs no extra KV traffic:
+  the [bk, hd] KV block is streamed once per q block for all G heads.
+
+VMEM budget at defaults (bq=128, bk=128, hd=128, G<=8, fp32 accum):
+  q (G*128*128*4) + k/v (2*128*128*4) + acc (G*128*128*4) + p (G*128*128*4)
+  ~= 3.3 MiB at G=8 — comfortably inside 16 MiB with double buffering.
+
+Outputs are the *partial* (o, m, l) triple (see kernels/ref.py) so the
+cross-device softmax merge (psum over the `model` axis) composes with the
+kernel unchanged.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_partial_kernel(qpos_ref, kpos_ref,     # prefetch-style position blocks
+                          q_ref, k_ref, v_ref,    # [bq*G, hd] / [bk, hd] blocks
+                          o_ref, m_ref, l_ref,    # outputs
+                          acc_ref, mm_ref, ll_ref,  # VMEM scratch
+                          *, causal: bool, scale: float, bq: int, bk: int,
+                          g: int, nk: int):
+    ks = pl.program_id(2)
+
+    @pl.when(ks == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        mm_ref[...] = jnp.full_like(mm_ref, NEG_INF)
+        ll_ref[...] = jnp.zeros_like(ll_ref)
+
+    q = q_ref[...].astype(jnp.float32)          # [G*bq, hd]
+    k = k_ref[...].astype(jnp.float32)          # [bk, hd]
+    v = v_ref[...].astype(jnp.float32)          # [bk, hv]
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale  # [G*bq, bk]
+
+    qpos = qpos_ref[...]                        # [bq] int32
+    kpos = kpos_ref[...]                        # [bk] int32
+    qpos_g = jnp.tile(qpos, (g,))               # [G*bq] — heads share positions
+    valid = (kpos[None, :] != 2**30)
+    if causal:
+        valid = valid & (qpos_g[:, None] >= kpos[None, :])
+    s = jnp.where(valid, s, NEG_INF)
+
+    m_prev = mm_ref[...]                        # [G*bq, 1]
+    m_blk = jnp.max(s, axis=-1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_blk)
+    safe = m_new > NEG_INF / 2
+    alpha = jnp.where(safe, jnp.exp(m_prev - m_new), 0.0)
+    p = jnp.where(safe, jnp.exp(s - m_new), 0.0)
+    ll_ref[...] = ll_ref[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())))
+    mm_ref[...] = m_new
+
+    @pl.when(ks == nk - 1)
+    def _fin():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+        m_ref[...] = mm_ref[...].astype(m_ref.dtype)
+        l_ref[...] = ll_ref[...].astype(l_ref.dtype)
+
+
+def flash_attention_partial(q, k, v, q_pos, kv_pos, *, causal=True,
+                            scale=None, block_q=128, block_k=128,
+                            interpret=True):
+    """Pallas partial flash attention.
+
+    q: [B, Tq, H, hd_k]; k: [B, S, Hkv, hd_k]; v: [B, S, Hkv, hd_v]
+    q_pos: [Tq] or [B, Tq]; kv_pos: [S]  (2**30 == padding)
+    Returns (o [B,Tq,H,hd_v] f32 un-normalized, m [B,Tq,H] f32, l [B,Tq,H] f32).
+    """
+    B, Tq, H, hdk = q.shape
+    S, Hkv = k.shape[1], k.shape[2]
+    hdv = v.shape[-1]
+    G = H // Hkv
+    if scale is None:
+        scale = 1.0 / (hdk ** 0.5)
+    if q_pos.ndim == 2:
+        # kernel assumes positions shared across batch; models pass [Tq]
+        q_pos = q_pos[0]
+
+    bq = min(block_q, _round_up(Tq, 8))
+    bk = min(block_k, _round_up(S, 8))
+    Tqp = _round_up(Tq, bq)
+    Sp = _round_up(S, bk)
+    nq, nk = Tqp // bq, Sp // bk
+
+    if Tqp != Tq:
+        q = jnp.pad(q, ((0, 0), (0, Tqp - Tq), (0, 0), (0, 0)))
+        q_pos = jnp.pad(q_pos, (0, Tqp - Tq), constant_values=-1)
+    if Sp != S:
+        k = jnp.pad(k, ((0, 0), (0, Sp - S), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, Sp - S), (0, 0), (0, 0)))
+        kv_pos = jnp.pad(kv_pos, (0, Sp - S), constant_values=2**30)
+
+    # fold grouped heads into q block rows: [B*Hkv, nq, G*bq, hd]
+    qg = (q.reshape(B, Tqp // bq, bq, Hkv, G, hdk)
+           .transpose(0, 3, 1, 4, 2, 5)
+           .reshape(B * Hkv, Tqp // bq, G * bq, hdk))
+    kg = k.transpose(0, 2, 1, 3).reshape(B * Hkv, Sp, hdk)
+    vg = v.transpose(0, 2, 1, 3).reshape(B * Hkv, Sp, hdv)
+
+    grid = (B * Hkv, nq, nk)
+    kern = functools.partial(_flash_partial_kernel, causal=causal,
+                             scale=scale, bq=bq, bk=bk, g=G, nk=nk)
+    o, m, l = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, bq), lambda b, i, j: (0, i)),          # q_pos
+            pl.BlockSpec((bk,), lambda b, i, j: (j,)),                  # kv_pos
+            pl.BlockSpec((None, None, G * bq, hdk), lambda b, i, j: (b, i, 0, 0)),
+            pl.BlockSpec((None, bk, hdk), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((None, bk, hdv), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((None, None, G * bq, hdv), lambda b, i, j: (b, i, 0, 0)),
+            pl.BlockSpec((None, None, G * bq, 1), lambda b, i, j: (b, i, 0, 0)),
+            pl.BlockSpec((None, None, G * bq, 1), lambda b, i, j: (b, i, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B * Hkv, nq, G * bq, hdv), jnp.float32),
+            jax.ShapeDtypeStruct((B * Hkv, nq, G * bq, 1), jnp.float32),
+            jax.ShapeDtypeStruct((B * Hkv, nq, G * bq, 1), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((G * bq, hdv), jnp.float32),   # acc
+            pltpu.VMEM((G * bq, 1), jnp.float32),     # running max
+            pltpu.VMEM((G * bq, 1), jnp.float32),     # running sum
+        ],
+        interpret=interpret,
+    )(jnp.broadcast_to(q_pos[None, :], (1, Tqp)), kv_pos, qg, kg, vg)
+
+    # unfold: [B*Hkv, nq, G*bq, hv] -> [B, Tq, H, hv]
+    def unfold(x, last):
+        x = x.reshape(B, Hkv, nq, G, bq, last).transpose(0, 2, 4, 1, 3, 5)
+        return x.reshape(B, Tqp, H, last)[:, :Tq]
+
+    o = unfold(o, hdv)
+    m = unfold(m, 1)[..., 0]
+    l = unfold(l, 1)[..., 0]
+    return o, m, l
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m

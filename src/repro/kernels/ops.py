@@ -1,0 +1,43 @@
+"""Jitted wrappers / dispatch for the Pallas kernels.
+
+On the CPU container the models execute the blockwise-jnp reference path
+(fast to compile, identical math); setting ``REPRO_USE_PALLAS=1`` (or calling
+``set_backend("pallas")``) routes attention through the Pallas kernel in
+interpret mode — on real TPU the Pallas path is the default.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+
+from repro.kernels import ref as _ref
+from repro.kernels import flash_attention as _fa
+
+_BACKEND = os.environ.get("REPRO_USE_PALLAS", "0") == "1" and "pallas" or "jnp"
+
+
+def set_backend(name: str) -> None:
+    global _BACKEND
+    assert name in ("jnp", "pallas")
+    _BACKEND = name
+
+
+def get_backend() -> str:
+    return _BACKEND
+
+
+def attention_partial(q, k, v, q_pos, kv_pos, *, causal=True, scale=None,
+                      block_k=512):
+    """Partial flash attention against a local KV shard (see kernels/ref.py).
+
+    Dispatches to the Pallas kernel (TPU target / interpret on CPU) or the
+    blockwise-jnp path by backend flag.  Both return identical (o, m, l).
+    """
+    if _BACKEND == "pallas":
+        on_tpu = jax.default_backend() == "tpu"
+        return _fa.flash_attention_partial(
+            q, k, v, q_pos, kv_pos, causal=causal, scale=scale,
+            interpret=not on_tpu)
+    return _ref.attention_partial_ref(
+        q, k, v, q_pos, kv_pos, causal=causal, scale=scale, block_k=block_k)

@@ -1,0 +1,122 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+``attention_partial_ref`` is both the correctness oracle for the Pallas flash
+kernel and the CPU execution path for the models (blockwise, memory-safe —
+never materializes the full score matrix).
+
+Partial-softmax convention (flash-decoding style): given queries and a *local*
+KV shard, return
+    m   = row max of masked scores                  [B, H, Tq]   (fp32)
+    l   = sum exp(s - m)                            [B, H, Tq]   (fp32)
+    o   = sum exp(s - m) * V  (un-normalized)       [B, Tq, H, hd_v] (fp32)
+so shards merge exactly: with M = max_r m_r,
+    out = sum_r exp(m_r - M) o_r / sum_r exp(m_r - M) l_r.
+Masking is positional: a KV slot with position kv_pos[j] is visible to query
+position q_pos[i] iff (not causal or q_pos[i] >= kv_pos[j]) and
+kv_pos[j] != PAD_POS.  PAD_POS marks empty cache slots.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+PAD_POS = jnp.int32(2**30)
+NEG_INF = -1e30
+
+
+def attention_partial_ref(q, k, v, q_pos, kv_pos, *, causal=True,
+                          scale=None, block_k=512):
+    """q: [B,Tq,H,hd_k]; k: [B,S,Hkv,hd_k]; v: [B,S,Hkv,hd_v];
+    q_pos: [B,Tq] or [Tq] int32; kv_pos: [S] int32 (PAD_POS = invalid).
+
+    Returns (o [B,Tq,H,hd_v] fp32 un-normalized, m [B,Tq,H] fp32, l [B,Tq,H] fp32).
+    """
+    B, Tq, H, hdk = q.shape
+    S, Hkv = k.shape[1], k.shape[2]
+    hdv = v.shape[-1]
+    G = H // Hkv
+    if scale is None:
+        scale = 1.0 / (hdk ** 0.5)
+    if q_pos.ndim == 1:
+        q_pos = jnp.broadcast_to(q_pos[None, :], (B, Tq))
+
+    # pad S to a block multiple
+    nb = max(1, -(-S // block_k))
+    Sp = nb * block_k
+    if Sp != S:
+        k = jnp.pad(k, ((0, 0), (0, Sp - S), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, Sp - S), (0, 0), (0, 0)))
+        kv_pos = jnp.pad(kv_pos, (0, Sp - S), constant_values=2**30)
+
+    qf = q.astype(jnp.float32).reshape(B, Tq, Hkv, G, hdk)
+    kb = k.astype(jnp.float32).reshape(B, nb, block_k, Hkv, hdk)
+    vb = v.astype(jnp.float32).reshape(B, nb, block_k, Hkv, hdv)
+    pb = kv_pos.reshape(nb, block_k)
+
+    def step(carry, blk):
+        m, l, acc = carry
+        kblk, vblk, pblk = blk
+        s = jnp.einsum("btkgh,bskh->btkgs", qf, kblk) * scale  # [B,Tq,Hkv,G,bk]
+        valid = pblk[None, None, None, None, :] != 2**30
+        if causal:
+            valid = valid & (q_pos[:, :, None, None, None]
+                             >= pblk[None, None, None, None, :])
+        s = jnp.where(valid, s, NEG_INF)
+        m_blk = jnp.max(s, axis=-1)
+        # the max statistic is gradient-frozen (jax.nn.softmax-style): its
+        # contribution cancels exactly in the o/l ratio, and freezing it
+        # keeps cross-device merges (pmax has no VJP) differentiable.
+        m_new = jax.lax.stop_gradient(jnp.maximum(m, m_blk))
+        # guard fully-masked rows (m_new == NEG_INF): exp(NEG_INF-NEG_INF)=1 bad
+        safe = m_new > NEG_INF / 2
+        alpha = jnp.where(safe, jnp.exp(m - m_new), 0.0)
+        p = jnp.where(safe[..., None], jnp.exp(s - m_new[..., None]), 0.0)
+        l_new = l * alpha + jnp.sum(p, axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum("btkgs,bskv->btkgv", p, vblk)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, Tq, Hkv, G), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Tq, Hkv, G), jnp.float32)
+    a0 = jnp.zeros((B, Tq, Hkv, G, hdv), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        step, (m0, l0, a0),
+        (jnp.moveaxis(kb, 1, 0), jnp.moveaxis(vb, 1, 0), pb))
+    o = acc.reshape(B, Tq, H, hdv)
+    return o, m.reshape(B, Tq, H), l.reshape(B, Tq, H)
+
+
+def merge_partials(parts):
+    """Merge a list of (o, m, l) partials (single-device oracle for the
+    cross-shard psum merge)."""
+    ms = jnp.stack([p[1] for p in parts])
+    m = jnp.max(ms, axis=0)
+    o = sum(p[0] * jnp.exp(p[1] - m)[:, :, :, None] for p in parts)
+    l = sum(p[2] * jnp.exp(p[1] - m) for p in parts)
+    return o, m, l
+
+
+def normalize(o, l):
+    return (o / jnp.maximum(l, 1e-30)[:, :, :, None])
+
+
+def mha_reference(q, k, v, q_pos, kv_pos, *, causal=True, scale=None):
+    """Naive full attention (small shapes only) — oracle for the oracle."""
+    B, Tq, H, hdk = q.shape
+    Hkv = k.shape[2]
+    G = H // Hkv
+    if scale is None:
+        scale = 1.0 / (hdk ** 0.5)
+    if q_pos.ndim == 1:
+        q_pos = jnp.broadcast_to(q_pos[None, :], (B, Tq))
+    qf = q.astype(jnp.float32).reshape(B, Tq, Hkv, G, hdk)
+    s = jnp.einsum("btkgh,bskh->btkgs", qf, k.astype(jnp.float32)) * scale
+    valid = (kv_pos != 2**30)[None, None, None, None, :]
+    if causal:
+        valid = valid & (q_pos[:, :, None, None, None] >= kv_pos[None, None, None, None, :])
+    s = jnp.where(valid, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(jnp.all(~valid, axis=-1, keepdims=True), 0.0, p)
+    o = jnp.einsum("btkgs,bskv->btkgv", p, v.astype(jnp.float32))
+    return o.reshape(B, Tq, H, v.shape[-1])

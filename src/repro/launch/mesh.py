@@ -1,0 +1,34 @@
+"""Production mesh builders.
+
+Defined as functions (never module-level constants) so importing this module
+never touches jax device state — required because the dry-run must set
+XLA_FLAGS before any jax initialization.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_test_mesh(data: int = 4, model: int = 2, pods: int = 1):
+    """Small mesh for CPU integration tests."""
+    if pods > 1:
+        return jax.make_mesh((pods, data, model), ("pod", "data", "model"),
+                             axis_types=(jax.sharding.AxisType.Auto,) * 3)
+    return jax.make_mesh((data, model), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+def mesh_dims(mesh) -> dict:
+    names = mesh.axis_names
+    return {
+        "pods": mesh.shape["pod"] if "pod" in names else 1,
+        "data": mesh.shape["data"],
+        "model": mesh.shape["model"],
+    }

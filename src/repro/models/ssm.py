@@ -1,0 +1,337 @@
+"""SSM mixers: Mamba2 (SSD chunked) and RWKV6 (Finch, data-dependent decay).
+
+Sharding over the `model` axis (DESIGN.md §5):
+  * Mamba2: *head-parallel* — heads (d_inner/head_dim = 112 for zamba2)
+    divide the axis; each rank processes the full chunk for its head shard
+    (the chunk is all-gathered, Megatron-SP-style, and the output
+    reduce-scattered back to sequence shards).  SSM state is carried across
+    SPPO subsequences and is naturally head-sharded — the hybrid arch has
+    *no* Type-0 KV growth.
+  * RWKV6: heads (40) do not divide 16, so RWKV stays fully
+    *sequence-sharded*: projections run on the local token shard with
+    gathered weights (zero duplicated FLOPs); the WKV recurrence runs on
+    local tokens and ranks are stitched together by an associative
+    state-composition pass (all-gather of tiny per-rank (decay, state)
+    summaries, prefix-composed locally).  Token shift crosses rank
+    boundaries with a single ppermute and chunk boundaries with carried
+    tail state.
+
+Both carry fp32 recurrent state across chunks/decode steps; both use a
+sub-chunk parallel scan (quadratic-in-P dual form, P<=128) inside a chunk.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.parallel.ctx import Ctx
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 (SSD) — head-parallel
+# ---------------------------------------------------------------------------
+
+
+class MambaState(NamedTuple):
+    ssm: jax.Array    # [B, H_loc, hd, ds] fp32
+    conv: jax.Array   # [B, W-1, conv_ch_loc] carried conv tail
+
+
+def mamba2_dims(cfg, sp: int):
+    d_in = cfg.ssm.expand * cfg.d_model
+    H = d_in // cfg.ssm.head_dim
+    assert H % sp == 0, f"mamba heads {H} must divide model axis {sp}"
+    return d_in, H, H // sp
+
+
+def mamba2_init_state(cfg, batch: int, sp: int) -> MambaState:
+    d_in, H, Hl = mamba2_dims(cfg, sp)
+    ds, w = cfg.ssm.d_state, cfg.ssm.conv_width
+    conv_ch = d_in // sp + 2 * ds
+    return MambaState(
+        ssm=jnp.zeros((batch, Hl, cfg.ssm.head_dim, ds), jnp.float32),
+        conv=jnp.zeros((batch, w - 1, conv_ch), jnp.float32),
+    )
+
+
+def _causal_conv(x, conv_tail, kernel):
+    """Depthwise causal conv. x: [B, T, C]; conv_tail: [B, W-1, C];
+    kernel: [W, C].  Returns (y [B,T,C], new_tail [B,W-1,C] fp32)."""
+    W = kernel.shape[0]
+    xx = jnp.concatenate([conv_tail.astype(x.dtype), x], axis=1)
+    y = sum(xx[:, i:i + x.shape[1]] * kernel[i][None, None, :]
+            for i in range(W))
+    new_tail = xx[:, -(W - 1):].astype(jnp.float32)
+    return y, new_tail
+
+
+def pick_subchunk(t: int, cap: int = 128) -> int:
+    """Largest power-of-two divisor of t, capped (sub-chunk scan width)."""
+    p = 1
+    while p * 2 <= cap and t % (p * 2) == 0:
+        p *= 2
+    return p
+
+
+def _segsum_decay(a):
+    """a: [..., P] per-step log-decay. L[..., t, s] = exp(sum_{s<j<=t} a_j)
+    for s <= t else 0.  The mask is applied *inside* the exp so the masked
+    entries (whose raw diff is +large) neither overflow nor poison gradients
+    with inf*0 -> NaN."""
+    P = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    tri = jnp.tril(jnp.ones((P, P), bool))
+    return jnp.exp(jnp.where(tri, diff, -1e30))
+
+
+def mamba2_mixer(x_loc, p, cfg, ctx: Ctx, state: MambaState, *,
+                 name_tag=None, pre_gathered=False, subchunk=128):
+    """x_loc: [B, T_loc, d] sequence shard (or [B, T, d] replicated when
+    pre_gathered — the decode path).  Returns (y same sharding, new state)."""
+    ssm = cfg.ssm
+    d_in, H, Hl = mamba2_dims(cfg, ctx.sp)
+    hd, ds = ssm.head_dim, ssm.d_state
+    d_in_loc = d_in // ctx.sp
+
+    x = x_loc if pre_gathered else ctx.all_gather_model(x_loc, axis=1)
+    B, T, _ = x.shape
+    # projections: head-sharded x/z/dt ("keep" weights), replicated B/C
+    xs = x @ p["in_x"]                    # [B,T,d_in/sp]
+    bc = x @ p["in_bc"]                   # [B,T,2*ds]   (replicated)
+    dt = x @ p["in_dt"] + p["dt_bias"]    # [B,T,Hl]
+    z = x @ p["in_z"]                     # [B,T,d_in/sp]
+    conv_in = jnp.concatenate([xs, bc], axis=-1)
+    conv_k = jnp.concatenate([p["conv_x"], p["conv_bc"]], axis=-1)
+    conv_out, new_tail = _causal_conv(conv_in, state.conv, conv_k)
+    conv_out = jax.nn.silu(conv_out)
+    xs = conv_out[..., :d_in_loc]
+    Bm = conv_out[..., d_in_loc:d_in_loc + ds]
+    Cm = conv_out[..., d_in_loc + ds:]
+    if name_tag is not None:
+        xs = name_tag(xs)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32))               # [B,T,Hl]
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))               # [Hl]
+    da = dt * A[None, None, :]                                 # log-decay
+    xh = xs.reshape(B, T, Hl, hd).astype(jnp.float32)
+    Bf = Bm.astype(jnp.float32)
+    Cf = Cm.astype(jnp.float32)
+
+    # sub-chunk scan: quadratic dual form inside P, state across sub-chunks
+    P = pick_subchunk(T, subchunk)
+    nc = T // P
+    xh = xh.reshape(B, nc, P, Hl, hd)
+    Bc = Bf.reshape(B, nc, P, ds)
+    Cc = Cf.reshape(B, nc, P, ds)
+    dac = da.reshape(B, nc, P, Hl)
+    dtc = dt.reshape(B, nc, P, Hl)
+
+    def step(S, blk):
+        xb, bb, cb, ab, dtb = blk                         # [B,P,...]
+        Lmat = _segsum_decay(ab.transpose(0, 2, 1))       # [B,Hl,P,P]
+        cb_ = jnp.einsum("bpn,bqn->bpq", cb, bb)          # C_t·B_s
+        w = cb_[:, None] * Lmat                           # [B,Hl,t,s]
+        y = jnp.einsum("bhts,bsh,bshd->bthd", w, dtb, xb)
+        cumin = jnp.exp(jnp.cumsum(ab, axis=1))           # [B,P,Hl]
+        y = y + jnp.einsum("bph,bpn,bhdn->bphd", cumin, cb, S)
+        tot = cumin[:, -1]                                # [B,Hl]
+        cs = jnp.cumsum(ab, axis=1)
+        decay_s = jnp.exp(cs[:, -1:, :] - cs)             # [B,P,Hl]
+        Snew = S * tot[:, :, None, None] + jnp.einsum(
+            "bph,bphd,bpn->bhdn", decay_s * dtb, xb, bb)
+        return Snew, y
+
+    S, ys = jax.lax.scan(
+        step, state.ssm,
+        (xh.transpose(1, 0, 2, 3, 4), Bc.transpose(1, 0, 2, 3),
+         Cc.transpose(1, 0, 2, 3), dac.transpose(1, 0, 2, 3),
+         dtc.transpose(1, 0, 2, 3)))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(B, T, Hl, hd)
+    y = y + xh.reshape(B, T, Hl, hd) * p["D"].astype(jnp.float32)[None, None, :, None]
+    y = y.reshape(B, T, Hl * hd)
+    # gated *per-head group* RMSNorm (shard-invariant under head-parallel TP;
+    # equals mamba2's RMSNormGated with ngroups = heads — DESIGN.md §5),
+    # then output projection (partial rows -> reduce/scatter)
+    yg = (y * jax.nn.silu(z.astype(jnp.float32))).reshape(B, T, Hl, hd)
+    var = jnp.mean(yg * yg, axis=-1, keepdims=True)
+    yg = yg * jax.lax.rsqrt(var + 1e-6)
+    y = (yg.reshape(B, T, Hl * hd)
+         * (1.0 + p["norm_scale"].astype(jnp.float32))).astype(x.dtype)
+    if name_tag is not None:
+        y = name_tag(y)
+    out = y @ p["out"]                                    # [B,T,d] partial
+    if pre_gathered:
+        out = ctx.psum_model(out)
+    else:
+        out = ctx.reduce_scatter_model(out, axis=1)
+    return out, MambaState(ssm=S, conv=new_tail)
+
+
+# ---------------------------------------------------------------------------
+# RWKV6 (Finch) — sequence-sharded, associative cross-rank state composition
+# ---------------------------------------------------------------------------
+
+
+class RWKVState(NamedTuple):
+    wkv: jax.Array      # [B, H, dk, dv] fp32 (replicated across model ranks)
+    shift_t: jax.Array  # [B, 1, d] last token of previous chunk (time-mix)
+    shift_c: jax.Array  # [B, 1, d] last token (channel-mix)
+
+
+def rwkv6_init_state(cfg, batch: int, sp: int) -> RWKVState:
+    H, dk = cfg.n_heads, cfg.hd
+    return RWKVState(
+        wkv=jnp.zeros((batch, H, dk, dk), jnp.float32),
+        shift_t=jnp.zeros((batch, 1, cfg.d_model), jnp.float32),
+        shift_c=jnp.zeros((batch, 1, cfg.d_model), jnp.float32),
+    )
+
+
+def _shard_token_shift(x_loc, prev_tail, ctx: Ctx):
+    """Previous-token view of a sequence-sharded chunk.
+
+    Rank r receives rank r-1's last token via ppermute; rank 0 uses the
+    carried chunk tail.  Returns (x_prev [B,T_loc,d], new_tail [B,1,d] —
+    the *global* chunk tail, replicated via a masked psum)."""
+    last = x_loc[:, -1:]
+    if ctx.sp > 1:
+        from_prev = ctx.ppermute_model(
+            last, perm=[(i, i + 1) for i in range(ctx.sp - 1)])
+        ridx = ctx.model_index()
+        head = jnp.where(ridx == 0, prev_tail.astype(x_loc.dtype), from_prev)
+        is_last = (ridx == ctx.sp - 1).astype(last.dtype)
+        new_tail = ctx.psum_model(last * is_last).astype(jnp.float32)
+    else:
+        head = prev_tail.astype(x_loc.dtype)
+        new_tail = last.astype(jnp.float32)
+    x_prev = jnp.concatenate([head, x_loc[:, :-1]], axis=1)
+    return x_prev, new_tail
+
+
+def _compose_states(S_start, dec_loc, S_loc, ctx: Ctx):
+    """Stitch per-rank WKV summaries into each rank's incoming state.
+
+    dec_loc: [B,H,dk] total decay over this rank's tokens;
+    S_loc: [B,H,dk,dv] state produced from this rank's tokens alone.
+    Returns (S_in for this rank, S_final replicated)."""
+    if ctx.sp == 1:
+        return S_start, S_start * dec_loc[..., None] + S_loc
+    decs = ctx.all_gather_model(dec_loc[None], axis=0)   # [sp,B,H,dk]
+    Ss = ctx.all_gather_model(S_loc[None], axis=0)       # [sp,B,H,dk,dv]
+    ridx = ctx.model_index()
+    S_run = S_start
+    S_in = S_start
+    for j in range(ctx.sp):
+        S_new = S_run * decs[j][..., None] + Ss[j]
+        S_in = jnp.where(ridx > j, S_new, S_in)
+        S_run = S_new
+    return S_in, S_run
+
+
+def rwkv6_time_mix(x_loc, p, cfg, ctx: Ctx, state: RWKVState, *,
+                   name_tag=None, pre_gathered=False, subchunk=32):
+    """RWKV6 time-mix (WKV6) on the local sequence shard."""
+    H, dk = cfg.n_heads, cfg.hd
+    dv = dk
+    x = x_loc
+    B, T, d = x.shape
+    xf = x.astype(jnp.float32)
+    if pre_gathered:  # decode: replicated single token
+        xprev = state.shift_t.astype(jnp.float32)
+        new_tail = xf[:, -1:]
+    else:
+        xprev, new_tail = _shard_token_shift(xf, state.shift_t, ctx)
+    xx = xprev - xf
+    # data-dependent lerp via small LoRA
+    xbar = xf + xx * p["mu_x"]
+    lora = jnp.tanh(xbar @ p["ddl_a"]) @ p["ddl_b"]     # [B,T,5*d]
+    lam = lora.reshape(B, T, 5, d) + p["mu_rkvwg"][None, None]
+    xr, xk, xv, xw, xg = [(xf + xx * lam[:, :, i]).astype(x.dtype)
+                          for i in range(5)]
+
+    r = (xr @ p["wr"]).reshape(B, T, H, dk).astype(jnp.float32)
+    k = (xk @ p["wk"]).reshape(B, T, H, dk).astype(jnp.float32)
+    v = (xv @ p["wv"]).reshape(B, T, H, dv).astype(jnp.float32)
+    g = jax.nn.silu(xg @ p["wg"])                       # [B,T,d] gate
+    dd = p["w0"][None, None] + jnp.tanh(xw @ p["dec_a"]) @ p["dec_b"]
+    lw = -jnp.exp(dd.astype(jnp.float32)).reshape(B, T, H, dk)  # log-decay <=0
+    u = p["u"].reshape(H, dk).astype(jnp.float32)
+
+    P = pick_subchunk(T, subchunk)
+    nc = T // P
+    rb = r.reshape(B, nc, P, H, dk).transpose(1, 0, 3, 2, 4)   # [nc,B,H,P,dk]
+    kb = k.reshape(B, nc, P, H, dk).transpose(1, 0, 3, 2, 4)
+    vb = v.reshape(B, nc, P, H, dv).transpose(1, 0, 3, 2, 4)
+    lwb = lw.reshape(B, nc, P, H, dk).transpose(1, 0, 3, 2, 4)
+
+    tri_strict = jnp.tril(jnp.ones((P, P), bool), -1)
+
+    def step(carry, blk):
+        S, dec = carry
+        rr, kk, vv, ll = blk                     # [B,H,P,*]
+        cs = jnp.cumsum(ll, axis=2)              # inclusive
+        cs_prev = cs - ll                        # exclusive (before t)
+        # intra-chunk per-channel decay in segsum form: every exponent <= 0
+        diff = cs_prev[:, :, :, None, :] - cs[:, :, None, :, :]  # [B,H,t,s,c]
+        dec_ts = jnp.exp(jnp.where(tri_strict[None, None, :, :, None],
+                                   diff, -1e30))
+        att = jnp.einsum("bhtc,bhtsc,bhsc->bhts", rr, dec_ts, kk)
+        diag = jnp.einsum("bhtc,hc,bhtc->bht", rr, u, kk)
+        y = jnp.einsum("bhts,bhsv->bhtv", att, vv) + diag[..., None] * vv
+        q_dec = rr * jnp.exp(cs_prev)            # cs_prev <= 0: safe
+        y = y + jnp.einsum("bhtc,bhcv->bhtv", q_dec, S)
+        tot = jnp.exp(cs[:, :, -1])              # [B,H,dk]
+        Snew = S * tot[..., None] + jnp.einsum(
+            "bhsc,bhsv->bhcv", kk * jnp.exp(cs[:, :, -1:, :] - cs), vv)
+        return (Snew, dec * tot), y
+
+    S0 = jnp.zeros_like(state.wkv)
+    dec0 = jnp.ones((B, H, dk), jnp.float32)
+    (S_loc, dec_loc), ys = jax.lax.scan(step, (S0, dec0), (rb, kb, vb, lwb))
+    # stitch ranks: add the incoming-state contribution for local tokens
+    if pre_gathered:
+        S_in, S_fin = state.wkv, state.wkv * dec_loc[..., None] + S_loc
+    else:
+        S_in, S_fin = _compose_states(state.wkv, dec_loc, S_loc, ctx)
+    lw_cum_prev = jnp.cumsum(lw, axis=1) - lw               # [B,T,H,dk]
+    q_dec_all = r * jnp.exp(lw_cum_prev)
+    y_in = jnp.einsum("bthc,bhcv->bthv", q_dec_all, S_in)   # [B,T,H,dv]
+    y = ys.transpose(1, 0, 3, 2, 4).reshape(B, T, H, dv) + y_in
+
+    # per-head groupnorm, gate, output projection
+    mu = jnp.mean(y, axis=-1, keepdims=True)
+    var = jnp.var(y, axis=-1, keepdims=True)
+    y = (y - mu) * jax.lax.rsqrt(var + 64e-5)
+    y = y.reshape(B, T, H * dv) * p["ln_x_scale"] + p["ln_x_bias"]
+    y = (y * g).astype(x.dtype)
+    if name_tag is not None:
+        y = name_tag(y)
+    out = y @ p["wo"]
+    return out, RWKVState(wkv=S_fin, shift_t=new_tail, shift_c=state.shift_c)
+
+
+def rwkv6_channel_mix(x_loc, p, cfg, ctx: Ctx, state: RWKVState, *,
+                      name_tag=None, pre_gathered=False):
+    """RWKV6 channel-mix (FFN analogue) on the local sequence shard."""
+    x = x_loc
+    xf = x.astype(jnp.float32)
+    if pre_gathered:
+        xprev = state.shift_c.astype(jnp.float32)
+        new_tail = xf[:, -1:]
+    else:
+        xprev, new_tail = _shard_token_shift(xf, state.shift_c, ctx)
+    xx = xprev - xf
+    xk = (xf + xx * p["mu_k"]).astype(x.dtype)
+    xr = (xf + xx * p["mu_r"]).astype(x.dtype)
+    h = xk @ p["wk_c"]
+    h = jnp.square(jax.nn.relu(h))
+    if name_tag is not None:
+        h = name_tag(h)
+    kv = h @ p["wv_c"]
+    out = jax.nn.sigmoid((xr @ p["wr_c"]).astype(jnp.float32)).astype(x.dtype) * kv
+    return out, RWKVState(wkv=state.wkv, shift_t=state.shift_t,
+                          shift_c=new_tail)

@@ -1,0 +1,280 @@
+"""Family slot programs + the scanned stage engine.
+
+A model is a sequence of uniform "slots" (a layer, or a homogeneous layer
+group) scanned per pipeline stage.  Every family provides:
+
+  slot_fn(cfg, p, s, x, ctx, meta, extras) -> (x, s, aux)
+
+with per-slot params p (already *gathered* for "ag" leaves), per-slot state s
+(KV caches / SSM states), sequence-sharded activations x, and chunk metadata
+(positions, cache offsets, offload tag).  Ghost slots (pipeline padding)
+carry gate=0 and reduce to identity.  The engine ``stage_apply`` runs the
+slot scan with SPPO's two-level checkpoint policy around each slot.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.offload import checkpoint_block
+from repro.models import attention as A
+from repro.models import layers as L
+from repro.models import moe as M
+from repro.models import ssm as S
+from repro.parallel.ctx import Ctx
+
+
+class ChunkMeta(NamedTuple):
+    q_pos: Any          # [T_loc] global positions of this rank's chunk shard
+    cache_off: Any      # local cache write offset (static or traced int)
+    kv_view: int        # STATIC visible local cache length after append
+    tag: Any            # offload tag fn (core.offload.make_tag)
+    decode: bool = False
+    my_slot: Any = None  # decode: striped cache write slot or -1
+
+
+ZERO = jnp.float32(0.0)
+
+
+def _res(x, delta, gate):
+    """Gated residual add — ghost slots (gate=0) become identity.
+    The gate is a structural constant (pipeline padding), not trainable."""
+    return x + jax.lax.stop_gradient(gate).astype(x.dtype) * delta
+
+
+# ---------------------------------------------------------------------------
+# Dense transformer layer (qwen2 / glm4 / nemotron / starcoder2 / gpt)
+# ---------------------------------------------------------------------------
+
+
+def dense_slot(cfg, p, s, x, ctx: Ctx, meta: ChunkMeta, extras=None):
+    h = L.apply_norm(x, p["ln1"], cfg.norm)
+    if meta.decode:
+        a, kv = A.gqa_decode_attention(h, p["attn"], cfg, ctx, s["kv"],
+                                       meta.q_pos[0], meta.my_slot)
+    else:
+        a, kv = A.gqa_self_attention(h, p["attn"], cfg, ctx, s["kv"],
+                                     meta.q_pos, meta.cache_off, meta.kv_view,
+                                     name_tag=meta.tag)
+    x = _res(x, a, p["gate"])
+    h2 = L.apply_norm(x, p["ln2"], cfg.norm)
+    m = L.mlp(h2, p["mlp"], cfg.act, name_tag=meta.tag)
+    x = _res(x, m, p["gate"])
+    return x, {"kv": kv}, ZERO
+
+
+# ---------------------------------------------------------------------------
+# MoE layer (granite: GQA + MoE; deepseek: MLA + MoE + shared expert)
+# ---------------------------------------------------------------------------
+
+
+def moe_slot(cfg, p, s, x, ctx: Ctx, meta: ChunkMeta, extras=None):
+    h = L.apply_norm(x, p["ln1"], cfg.norm)
+    if cfg.mla is not None:
+        a, kv = A.mla_attention(h, p["attn"], cfg, ctx, s["kv"], meta.q_pos,
+                                meta.cache_off, meta.kv_view,
+                                name_tag=meta.tag, decode=meta.decode,
+                                my_slot=meta.my_slot)
+    elif meta.decode:
+        a, kv = A.gqa_decode_attention(h, p["attn"], cfg, ctx, s["kv"],
+                                       meta.q_pos[0], meta.my_slot)
+    else:
+        a, kv = A.gqa_self_attention(h, p["attn"], cfg, ctx, s["kv"],
+                                     meta.q_pos, meta.cache_off, meta.kv_view,
+                                     name_tag=meta.tag)
+    x = _res(x, a, p["gate"])
+    h2 = L.apply_norm(x, p["ln2"], cfg.norm)
+    m, aux = M.moe_block(h2, p["moe"], cfg, ctx, name_tag=meta.tag)
+    x = _res(x, m, p["gate"])
+    return x, {"kv": kv}, aux * p["gate"]
+
+
+# ---------------------------------------------------------------------------
+# VLM group (llama-3.2-vision): `every` self layers + 1 cross-attn layer
+# ---------------------------------------------------------------------------
+
+
+def vlm_group_slot(cfg, p, s, x, ctx: Ctx, meta: ChunkMeta, extras=None):
+    n_self = cfg.cross_attn.every
+    kvs = []
+    for i in range(n_self):
+        pi = jax.tree_util.tree_map(lambda a: a[i], p["self"])
+        si = jax.tree_util.tree_map(lambda a: a[i], s["self"])
+        h = L.apply_norm(x, pi["ln1"], cfg.norm)
+        if meta.decode:
+            a, kv = A.gqa_decode_attention(h, pi["attn"], cfg, ctx, si,
+                                           meta.q_pos[0], meta.my_slot)
+        else:
+            a, kv = A.gqa_self_attention(h, pi["attn"], cfg, ctx, si,
+                                         meta.q_pos, meta.cache_off,
+                                         meta.kv_view, name_tag=meta.tag)
+        x = _res(x, a, pi["gate"])
+        h2 = L.apply_norm(x, pi["ln2"], cfg.norm)
+        m = L.mlp(h2, pi["mlp"], cfg.act, name_tag=meta.tag)
+        x = _res(x, m, pi["gate"])
+        kvs.append(kv)
+    # cross-attention sub-layer (gated, as in llama-3.2)
+    h = L.apply_norm(x, p["xln1"], cfg.norm)
+    a = A.cross_attention(h, p["xattn"], cfg, ctx, s["xkv"], name_tag=meta.tag)
+    x = _res(x, jnp.tanh(p["xgate_attn"]).astype(x.dtype) * a, p["gate"])
+    h2 = L.apply_norm(x, p["xln2"], cfg.norm)
+    m = L.mlp(h2, p["xmlp"], cfg.act, name_tag=meta.tag)
+    x = _res(x, jnp.tanh(p["xgate_mlp"]).astype(x.dtype) * m, p["gate"])
+    s_new = {"self": jax.tree_util.tree_map(lambda *a: jnp.stack(a), *kvs),
+             "xkv": s["xkv"]}
+    return x, s_new, ZERO
+
+
+# ---------------------------------------------------------------------------
+# Zamba2 group: `every` Mamba2 mixers + the weight-shared attention block
+# ---------------------------------------------------------------------------
+
+
+def zamba_group_slot(cfg, p, s, x, ctx: Ctx, meta: ChunkMeta, extras=None):
+    n_m = cfg.shared_attn_every
+    states = []
+    for i in range(n_m):
+        pi = jax.tree_util.tree_map(lambda a: a[i], p["mamba"])
+        si = jax.tree_util.tree_map(lambda a: a[i], s["mamba"])
+        h = L.apply_norm(x, pi["ln"], cfg.norm)
+        y, st = S.mamba2_mixer(h, pi["mix"], cfg, ctx, si, name_tag=meta.tag,
+                               pre_gathered=meta.decode)
+        x = _res(x, y, pi["gate"])
+        states.append(st)
+    # shared transformer block (params in extras — weight-tied across groups)
+    sp_ = extras["shared"]
+    h = L.apply_norm(x, sp_["ln1"], cfg.norm)
+    if meta.decode:
+        a, kv = A.gqa_decode_attention(h, sp_["attn"], cfg, ctx, s["shared_kv"],
+                                       meta.q_pos[0], meta.my_slot)
+    else:
+        a, kv = A.gqa_self_attention(h, sp_["attn"], cfg, ctx, s["shared_kv"],
+                                     meta.q_pos, meta.cache_off, meta.kv_view,
+                                     name_tag=meta.tag)
+    x = _res(x, a, p["gate_shared"])
+    h2 = L.apply_norm(x, sp_["ln2"], cfg.norm)
+    m = L.mlp(h2, sp_["mlp"], cfg.act, name_tag=meta.tag)
+    x = _res(x, m, p["gate_shared"])
+    s_new = {"mamba": jax.tree_util.tree_map(lambda *a: jnp.stack(a), *states),
+             "shared_kv": kv}
+    return x, s_new, ZERO
+
+
+# ---------------------------------------------------------------------------
+# RWKV6 layer: time-mix + channel-mix
+# ---------------------------------------------------------------------------
+
+
+def rwkv_slot(cfg, p, s, x, ctx: Ctx, meta: ChunkMeta, extras=None):
+    st: S.RWKVState = s["rwkv"]
+    h = L.apply_norm(x, p["ln1"], cfg.norm)
+    y, st = S.rwkv6_time_mix(h, p["tmix"], cfg, ctx, st, name_tag=meta.tag,
+                             pre_gathered=meta.decode)
+    x = _res(x, y, p["gate"])
+    h2 = L.apply_norm(x, p["ln2"], cfg.norm)
+    y2, st = S.rwkv6_channel_mix(h2, p["cmix"], cfg, ctx, st,
+                                 name_tag=meta.tag, pre_gathered=meta.decode)
+    x = _res(x, y2, p["gate"])
+    return x, {"rwkv": st}, ZERO
+
+
+# ---------------------------------------------------------------------------
+# Whisper: decoder slot (self + cross + mlp) and encoder layer
+# ---------------------------------------------------------------------------
+
+
+def whisper_dec_slot(cfg, p, s, x, ctx: Ctx, meta: ChunkMeta, extras=None):
+    h = L.apply_norm(x, p["ln1"], cfg.norm)
+    if meta.decode:
+        a, kv = A.gqa_decode_attention(h, p["attn"], cfg, ctx, s["kv"],
+                                       meta.q_pos[0], meta.my_slot)
+    else:
+        a, kv = A.gqa_self_attention(h, p["attn"], cfg, ctx, s["kv"],
+                                     meta.q_pos, meta.cache_off, meta.kv_view,
+                                     name_tag=meta.tag)
+    x = _res(x, a, p["gate"])
+    hx = L.apply_norm(x, p["xln"], cfg.norm)
+    a2 = A.cross_attention(hx, p["xattn"], cfg, ctx, s["xkv"],
+                           name_tag=meta.tag)
+    x = _res(x, a2, p["gate"])
+    h2 = L.apply_norm(x, p["ln2"], cfg.norm)
+    m = L.mlp(h2, p["mlp"], cfg.act, name_tag=meta.tag)
+    x = _res(x, m, p["gate"])
+    return x, {"kv": kv, "xkv": s["xkv"]}, ZERO
+
+
+def encoder_layer(cfg, p, x_loc, ctx: Ctx, n_valid: int):
+    """Bidirectional encoder layer over the (stub-embedded) frame sequence."""
+    B, Tl, _ = x_loc.shape
+    H, hd = cfg.n_heads, cfg.hd
+    h = L.apply_norm(x_loc, p["ln1"], cfg.norm)
+    q = (h @ p["attn"]["wq"]).reshape(B, Tl, H, hd)
+    k = (h @ p["attn"]["wk"]).reshape(B, Tl, cfg.n_kv_heads, hd)
+    v = (h @ p["attn"]["wv"]).reshape(B, Tl, cfg.n_kv_heads, hd)
+    if cfg.qkv_bias:
+        q = q + p["attn"]["bq"].reshape(H, hd)
+        k = k + p["attn"]["bk"].reshape(cfg.n_kv_heads, hd)
+        v = v + p["attn"]["bv"].reshape(cfg.n_kv_heads, hd)
+    gidx = ctx.model_index() * Tl + jnp.arange(Tl, dtype=jnp.int32)
+    pos = jnp.where(gidx < n_valid, gidx, A.PAD)
+    out = A.dist_attention(q, k, v, pos, pos, ctx, causal=False)
+    a = out.reshape(B, Tl, H * hd) @ p["attn"]["wo"]
+    x = x_loc + a
+    h2 = L.apply_norm(x, p["ln2"], cfg.norm)
+    m = L.mlp(h2, p["mlp"], cfg.act)
+    return x + m
+
+
+SLOT_FNS = {
+    "dense": dense_slot,
+    "moe": moe_slot,
+    "vlm": vlm_group_slot,
+    "hybrid": zamba_group_slot,
+    "ssm": rwkv_slot,
+    "audio": whisper_dec_slot,
+}
+
+
+# ---------------------------------------------------------------------------
+# The stage engine: scan slots with weight-gather + SPPO checkpointing
+# ---------------------------------------------------------------------------
+
+
+def gather_params(p_slot, shard_dims, ctx: Ctx):
+    """All-gather "ag" leaves (int marker = gather dim) over the model axis;
+    "rep"/"keepN" string markers pass through unchanged.  With
+    ctx.grad_compress, the gather's transpose (the weight-grad
+    reduce-scatter) runs in bf16 (§Perf)."""
+    def g(leaf, dim):
+        if isinstance(dim, int):
+            return ctx.all_gather_param(leaf, axis=dim)
+        return leaf
+    return jax.tree_util.tree_map(g, p_slot, shard_dims)
+
+
+def stage_apply(cfg, family: str, stage_params, shard_dims, state, x, ctx: Ctx,
+                meta: ChunkMeta, extras=None, *, offload=True, remat="sppo"):
+    """Run one pipeline stage (a stack of slots) on one chunk.
+
+    stage_params: pytree with leading slot dim (local shards);
+    state: matching pytree of per-slot caches/states.
+    Returns (x, new_state, aux_sum)."""
+    slot = SLOT_FNS[family]
+
+    def body(carry, ps):
+        xx = carry
+        p_slot, s_slot = ps
+
+        def inner(p_l, s_l, x_l):
+            p_full = gather_params(p_l, shard_dims, ctx)
+            return slot(cfg, p_full, s_l, x_l, ctx, meta, extras)
+
+        fn = checkpoint_block(inner, offload=offload, remat=remat)
+        xx, s_new, aux = fn(p_slot, s_slot, xx)
+        return xx, (s_new, aux)
+
+    x, (state_new, auxs) = jax.lax.scan(body, x, (stage_params, state))
+    return x, state_new, jnp.sum(auxs)

@@ -1,0 +1,184 @@
+"""Parallel context: named-axis collectives with a single-device no-op mode.
+
+All model code takes a ``Ctx``.  Inside ``shard_map`` the ctx is bound to real
+mesh axis names and every helper lowers to a collective; in single-device mode
+(tests, reference oracles) every helper degenerates to the identity, so the
+same model code is both the distributed implementation and its own oracle.
+
+Axis roles (see DESIGN.md §4):
+  model  — SP/TP domain: sequence-sharded activations, parameter shards
+           (all-gathered per layer), expert parallelism, vocab-parallel loss.
+  data   — dp x pp: pipeline stages are a sub-grouping; gradient reduction
+           runs over dp subgroups (and the pod axis when present).
+  pod    — pure DP across pods (slow DCI links); only gradient all-reduce.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class Ctx:
+    """Collective context. ``model_axis=None`` means single-device mode."""
+
+    model_axis: Optional[str] = None
+    data_axis: Optional[str] = None
+    pod_axis: Optional[str] = None
+    sp: int = 1      # size of model axis
+    dp: int = 1      # data-parallel groups within data axis
+    pp: int = 1      # pipeline stages within data axis (dp * pp == data size)
+    pods: int = 1
+    # perf knobs threaded from the ParallelPlan (see configs/base.py)
+    attn_mode: str = "gather_q"
+    merge_bf16: bool = False
+    grad_compress: bool = False
+
+    # ----- sizes / indices -------------------------------------------------
+    @property
+    def distributed(self) -> bool:
+        return self.model_axis is not None
+
+    def model_index(self):
+        if self.model_axis is None:
+            return jnp.int32(0)
+        return jax.lax.axis_index(self.model_axis)
+
+    def data_index(self):
+        if self.data_axis is None:
+            return jnp.int32(0)
+        return jax.lax.axis_index(self.data_axis)
+
+    def stage_index(self):
+        """Pipeline stage of this device: data_index % pp (stage-major)."""
+        return self.data_index() % self.pp
+
+    def dp_index(self):
+        return self.data_index() // self.pp
+
+    # ----- model-axis collectives -----------------------------------------
+    def psum_model(self, x):
+        if self.model_axis is None or self.sp == 1:
+            return x
+        return jax.lax.psum(x, self.model_axis)
+
+    def pmax_model(self, x):
+        if self.model_axis is None or self.sp == 1:
+            return x
+        return jax.lax.pmax(x, self.model_axis)
+
+    def all_gather_model(self, x, axis: int):
+        """Gather shards along `axis` (tiled: result dim = sp * local dim)."""
+        if self.model_axis is None or self.sp == 1:
+            return x
+        return jax.lax.all_gather(x, self.model_axis, axis=axis, tiled=True)
+
+    def all_gather_param(self, x, axis: int):
+        """Weight gather for compute.  With grad_compress the transpose
+        (the weight-gradient reduce-scatter — the dominant train collective)
+        runs in bf16 instead of the f32 the autodiff cotangents carry."""
+        if self.model_axis is None or self.sp == 1:
+            return x
+        if not self.grad_compress:
+            return jax.lax.all_gather(x, self.model_axis, axis=axis,
+                                      tiled=True)
+        return _ag_bf16_grad(x, self.model_axis, axis)
+
+    def reduce_scatter_model(self, x, axis: int):
+        if self.model_axis is None or self.sp == 1:
+            return x
+        return jax.lax.psum_scatter(x, self.model_axis,
+                                    scatter_dimension=axis, tiled=True)
+
+    def ppermute_model(self, x, perm: Sequence[Tuple[int, int]]):
+        if self.model_axis is None or self.sp == 1:
+            return x
+        return jax.lax.ppermute(x, self.model_axis, perm=perm)
+
+    def all_to_all_model(self, x, split_axis: int, concat_axis: int):
+        if self.model_axis is None or self.sp == 1:
+            return x
+        return jax.lax.all_to_all(x, self.model_axis, split_axis=split_axis,
+                                  concat_axis=concat_axis, tiled=True)
+
+    # ----- data/pod-axis collectives ---------------------------------------
+    def _dp_groups(self):
+        """axis_index_groups for dp subgroups of the data axis (same stage)."""
+        n = self.dp * self.pp
+        return [[g * self.pp + s for g in range(self.dp)] for s in range(self.pp)]
+
+    def psum_grads(self, x):
+        """Gradient reduction across dp replicas (same pipeline stage) + pods."""
+        if self.data_axis is not None and self.dp > 1:
+            x = jax.lax.psum(x, self.data_axis,
+                             axis_index_groups=self._dp_groups())
+        if self.pod_axis is not None and self.pods > 1:
+            x = jax.lax.psum(x, self.pod_axis)
+        return x
+
+    def psum_globals(self, x):
+        """Gradient reduction for *global* params (embed/head/shared blocks):
+        contributions live on different stages, so reduce over the full data
+        axis (+ pods), not just dp subgroups."""
+        if self.data_axis is not None and self.dp * self.pp > 1:
+            x = jax.lax.psum(x, self.data_axis)
+        if self.pod_axis is not None and self.pods > 1:
+            x = jax.lax.psum(x, self.pod_axis)
+        return x
+
+    def psum_loss_all(self, x):
+        """Scalar reduction over every device (loss/metric aggregation)."""
+        for ax, size in ((self.model_axis, self.sp),
+                         (self.data_axis, self.dp * self.pp),
+                         (self.pod_axis, self.pods)):
+            if ax is not None and size > 1:
+                x = jax.lax.psum(x, ax)
+        return x
+
+    def ppermute_stage(self, x, perm: Sequence[Tuple[int, int]]):
+        """Permute along the data axis (pipeline stage hand-off)."""
+        if self.data_axis is None or self.dp * self.pp == 1:
+            return x
+        return jax.lax.ppermute(x, self.data_axis, perm=perm)
+
+    def next_stage_perm(self) -> Sequence[Tuple[int, int]]:
+        """(i -> i+1) within each dp group; stage-major layout."""
+        n = self.dp * self.pp
+        return [(i, i + 1) for i in range(n) if (i % self.pp) != self.pp - 1]
+
+
+import functools as _ft
+
+
+@_ft.partial(jax.custom_vjp, nondiff_argnums=(1, 2))
+def _ag_bf16_grad(x, axis_name, dim):
+    return jax.lax.all_gather(x, axis_name, axis=dim, tiled=True)
+
+
+def _ag_fwd(x, axis_name, dim):
+    # residual: zero-size array carrying the primal dtype (dtypes are not
+    # valid jax residual types)
+    return _ag_bf16_grad(x, axis_name, dim), jnp.zeros((0,), x.dtype)
+
+
+def _ag_bwd(axis_name, dim, proto, g):
+    g = jax.lax.psum_scatter(g.astype(jnp.bfloat16), axis_name,
+                             scatter_dimension=dim, tiled=True)
+    return (g.astype(proto.dtype),)
+
+
+_ag_bf16_grad.defvjp(_ag_fwd, _ag_bwd)
+
+
+SINGLE = Ctx()
+
+
+def make_ctx(plan, *, model_axis="model", data_axis="data", pod_axis=None,
+             pods=1) -> Ctx:
+    return Ctx(model_axis=model_axis if plan.sp > 1 else model_axis,
+               data_axis=data_axis,
+               pod_axis=pod_axis,
+               sp=plan.sp, dp=plan.dp, pp=plan.pp, pods=pods)

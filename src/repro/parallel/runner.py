@@ -1,0 +1,519 @@
+"""The distributed execution engine: SPPO pipeline inside shard_map.
+
+Builds the three step functions per (arch x shape x mesh) cell:
+
+  train_step(params, opt_state, batch)  -> (params', opt_state', metrics)
+  prefill_step(params, batch)           -> (caches, last_hidden)
+  serve_step(params, caches, batch)     -> (caches', next_tokens)
+
+Everything distributed runs in one ``shard_map`` over the production mesh;
+the optimizer applies outside shard_map on the global (sharded) arrays so
+moment host-offload / ZeRO-1 shardings are plain GSPMD annotations.
+
+Pipeline semantics (DESIGN.md §2/§4): at tick t, stage s = data_idx % pp
+processes chunk c = t − s; hand-off by ppermute along the data axis within
+dp groups; the backward pipeline comes from differentiating the tick loop.
+pp == 1 uses exact FLOPs-balanced variable-length chunks with per-chunk
+offload ratios; pp > 1 uses equal chunks (lock-step SPMD) with tick-aligned
+ratios.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ParallelPlan, ShapeConfig
+from repro.core import costmodel as cm
+from repro.core import offload as ofl
+from repro.core import partition as part
+from repro.models.model_zoo import ModelDef, build_model
+from repro.models.transformer import ChunkMeta
+from repro.parallel import specs as SP
+from repro.parallel.ctx import Ctx
+from repro.parallel.plans import resolve_plan
+
+try:  # jax >= 0.8
+    from jax import shard_map as _shard_map
+
+    def shard_map(f, mesh, in_specs, out_specs):
+        return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_vma=False)
+except (ImportError, TypeError):  # pragma: no cover
+    from jax.experimental.shard_map import shard_map as _sm
+
+    def shard_map(f, mesh, in_specs, out_specs):
+        return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                   check_rep=False)
+
+
+DECODE_BUDGET = 128  # extra decode slots beyond the shape's cache length
+
+
+# ---------------------------------------------------------------------------
+# Cell: one fully-resolved (arch x shape x mesh) configuration
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class Cell:
+    mdef: ModelDef
+    plan: ParallelPlan
+    shape: ShapeConfig
+    pods: int
+    data_size: int
+    model_size: int
+    sched: part.ChunkSchedule
+    alphas: tuple
+    dtype: Any = jnp.bfloat16
+
+    @property
+    def cfg(self) -> ModelConfig:
+        return self.mdef.cfg
+
+    @property
+    def b_loc(self) -> int:
+        return max(1, self.shape.global_batch // (self.pods * self.plan.dp))
+
+    @property
+    def cache_loc(self) -> int:
+        s = self.shape.seq_len
+        # prefill leaves room for subsequent decode appends (same geometry,
+        # so a prefill cache feeds serve_step directly)
+        extra = (DECODE_BUDGET * self.plan.sp
+                 if self.shape.kind in ("decode", "prefill") else 0)
+        return (s + extra) // self.plan.sp
+
+    def ctx(self) -> Ctx:
+        return Ctx(model_axis="model", data_axis="data",
+                   pod_axis="pod" if self.pods > 1 else None,
+                   sp=self.plan.sp, dp=self.plan.dp, pp=self.plan.pp,
+                   pods=self.pods,
+                   attn_mode=self.plan.attn_mode,
+                   merge_bf16=self.plan.merge_bf16,
+                   grad_compress=self.plan.grad_compress)
+
+
+def resolve_cell(arch, shape_cfg: ShapeConfig, *, data_size=16, model_size=16,
+                 pods=1, overrides=None, hw=cm.V5E) -> Cell:
+    mdef = arch if isinstance(arch, ModelDef) else build_model(arch)
+    cfg = mdef.cfg
+    plan = resolve_plan(cfg, shape_cfg, data_size=data_size,
+                        model_size=model_size, pods=pods, overrides=overrides)
+    n = plan.n_chunks
+    if shape_cfg.kind == "decode":
+        sched = part.ChunkSchedule((1,), (0,), 1, "decode")
+        alphas = (0.0,)
+    else:
+        mult = max(model_size, 128) if plan.pp == 1 else model_size
+        policy = plan.partition if plan.pp == 1 else "length"
+        if plan.pp > 1:
+            assert shape_cfg.seq_len % (n * model_size) == 0
+            sched = part.partition_length(shape_cfg.seq_len, n)
+        else:
+            sched = part.partition(shape_cfg.seq_len, n, cfg, policy,
+                                   multiple=mult)
+        # sequence-aware offload ratios from the cost model (§5.2)
+        n_params = SP.count_active_params(mdef, plan.pp, data_size)
+        r = part.flops_per_token_ratio(cfg)
+        costs = part.chunk_costs(sched, r)
+        scale = (6 * n_params * shape_cfg.global_batch * shape_cfg.seq_len
+                 / sum(costs) / (plan.sp * plan.pp * hw.peak_flops_bf16))
+        times = [c * scale for c in costs]
+        b_loc = max(1, shape_cfg.global_batch // (pods * plan.dp))
+        acts = [34 * (b_loc / max(plan.grad_accum, 1)) * l * cfg.d_model * 2
+                * (cfg.n_layers / plan.pp) / plan.sp for l in sched.lengths]
+        alphas = ofl.sequence_aware_alphas(acts, times, hw.d2h_bw).alphas
+        if not plan.offload:
+            alphas = tuple(0.0 for _ in alphas)
+    return Cell(mdef=mdef, plan=plan, shape=shape_cfg, pods=pods,
+                data_size=data_size, model_size=model_size,
+                sched=sched, alphas=alphas)
+
+
+# ---------------------------------------------------------------------------
+# The pipeline forward (shared by train loss / prefill)
+# ---------------------------------------------------------------------------
+
+
+def _squeeze_lead(tree, n: int):
+    return jax.tree_util.tree_map(
+        lambda a: a.reshape(a.shape[n:]), tree)
+
+
+def run_pipeline(cell: Cell, ctx: Ctx, stage_p, g, tokens, labels, context,
+                 *, with_loss: bool, collect_state: bool = False):
+    """tokens/labels: [B_loc, S] local; context: [B_loc, Nctx_loc, d] or None.
+
+    Returns dict(loss_sum, denom, aux, state, last_x)."""
+    mdef, cfg, plan = cell.mdef, cell.cfg, cell.plan
+    sp, pp = plan.sp, plan.pp
+    N = cell.sched.n
+    S = cell.shape.seq_len
+    B = tokens.shape[0]
+    d = cfg.d_model
+
+    ctxt = None
+    if cfg.encoder_layers:
+        ctxt = mdef.encode(g, context, ctx)
+    elif cfg.cross_attn is not None:
+        ctxt = context
+    state = mdef.init_state(stage_p, g, ctx, B, cell.cache_loc, cell.dtype,
+                            context=ctxt)
+    rank = ctx.model_index()
+    stage = ctx.stage_index()
+    loss_acc = jnp.float32(0.0)
+    den_acc = jnp.float32(0.0)
+    aux_acc = jnp.float32(0.0)
+
+    def chunk_positions(off, lloc):
+        return off + rank * lloc + jnp.arange(lloc, dtype=jnp.int32)
+
+    if pp == 1:
+        x_last = None
+        for c in range(N):
+            off, ln = cell.sched.offsets[c], cell.sched.lengths[c]
+            lloc = ln // sp
+            ids = jax.lax.slice_in_dim(tokens, off, off + ln, axis=1)
+            q_pos = chunk_positions(off, lloc)
+            x = mdef.embed(g, ids, q_pos, ctx)
+            meta = ChunkMeta(q_pos=q_pos, cache_off=off // sp,
+                             kv_view=(off + ln) // sp,
+                             tag=ofl.make_tag(cell.alphas[c]))
+            x, state, aux = mdef.stage_apply(
+                stage_p, state, x, ctx, meta, g,
+                offload=plan.offload, remat=plan.remat)
+            aux_acc = aux_acc + aux
+            if with_loss:
+                lab = jax.lax.slice_in_dim(labels, off, off + ln, axis=1)
+                ls, cnt = mdef.head_loss(g, x, lab,
+                                         jnp.ones_like(lab, jnp.float32), ctx)
+                loss_acc, den_acc = loss_acc + ls, den_acc + cnt
+            x_last = x
+        return dict(loss=loss_acc, denom=den_acc, aux=aux_acc, state=state,
+                    last_x=x_last)
+
+    # ---- pp > 1: lock-step tick pipeline -----------------------------------
+    clen = S // N
+    lloc = clen // sp
+    carry = jnp.zeros((B, lloc, d), cell.dtype)
+    x_out = carry
+    for t in range(N + pp - 1):
+        if t < N:
+            ids = jax.lax.slice_in_dim(tokens, t * clen, (t + 1) * clen, axis=1)
+            x0 = mdef.embed(g, ids, chunk_positions(t * clen, lloc), ctx)
+        else:
+            x0 = jnp.zeros((B, lloc, d), cell.dtype)
+        h = jnp.where(stage == 0, x0, carry)
+        c_my = jnp.clip(t - stage, 0, N - 1)
+        off_my = c_my * clen
+        q_pos = chunk_positions(off_my, lloc)
+        meta = ChunkMeta(q_pos=q_pos, cache_off=c_my * lloc,
+                         kv_view=min(t + 1, N) * lloc,
+                         tag=ofl.make_tag(cell.alphas[min(t, N - 1)]))
+        x_out, state, aux = mdef.stage_apply(
+            stage_p, state, h, ctx, meta, g,
+            offload=plan.offload, remat=plan.remat)
+        valid = (t - stage >= 0) & (t - stage < N)
+        aux_acc = aux_acc + jnp.where(valid, aux, 0.0)
+        c_last = t - (pp - 1)
+        if with_loss and 0 <= c_last < N:
+            lab = jax.lax.slice_in_dim(labels, c_last * clen,
+                                       (c_last + 1) * clen, axis=1)
+            ls, cnt = mdef.head_loss(g, x_out, lab,
+                                     jnp.ones_like(lab, jnp.float32), ctx)
+            is_last = (stage == pp - 1).astype(jnp.float32)
+            loss_acc = loss_acc + is_last * ls
+            den_acc = den_acc + is_last * cnt
+        carry = ctx.ppermute_stage(x_out, ctx.next_stage_perm())
+    return dict(loss=loss_acc, denom=den_acc, aux=aux_acc, state=state,
+                last_x=x_out)
+
+
+# ---------------------------------------------------------------------------
+# Batch structs + shardings
+# ---------------------------------------------------------------------------
+
+
+def batch_struct(cell: Cell):
+    """ShapeDtypeStructs + PartitionSpecs for one step's inputs."""
+    B_loc, S = cell.b_loc, cell.shape.seq_len
+    pods, data = cell.pods, cell.data_size
+    cfg = cell.cfg
+    lead = (pods, data)
+    st: Dict[str, Any] = {}
+    sp_: Dict[str, Any] = {}
+    if cell.shape.kind == "decode":
+        st["tokens"] = jax.ShapeDtypeStruct(lead + (B_loc, 1), jnp.int32)
+        sp_["tokens"] = P("pod", "data") if pods > 1 else P(None, "data")
+        st["pos"] = jax.ShapeDtypeStruct((), jnp.int32)
+        sp_["pos"] = P()
+    else:
+        st["tokens"] = jax.ShapeDtypeStruct(lead + (B_loc, S), jnp.int32)
+        st["labels"] = jax.ShapeDtypeStruct(lead + (B_loc, S), jnp.int32)
+        tok_spec = P("pod", "data") if pods > 1 else P(None, "data")
+        sp_["tokens"] = tok_spec
+        sp_["labels"] = tok_spec
+    if cfg.cross_attn is not None:
+        n_ctx = (cfg.n_frames if cfg.encoder_layers
+                 else cfg.cross_attn.n_context_tokens)
+        n_pad = -(-n_ctx // cell.plan.sp) * cell.plan.sp
+        st["context"] = jax.ShapeDtypeStruct(
+            lead + (B_loc, n_pad, cfg.d_model), cell.dtype)
+        sp_["context"] = (P("pod", "data", None, "model")
+                          if pods > 1 else P(None, "data", None, "model"))
+    return st, sp_
+
+
+def _in_specs_for_params(cell: Cell):
+    return {"stages": SP.stage_specs(cell.mdef, cell.plan.pp),
+            "globals": SP.globals_specs(cell.mdef)}
+
+
+# ---------------------------------------------------------------------------
+# train_step
+# ---------------------------------------------------------------------------
+
+
+def make_train_step(cell: Cell, mesh, *, lr_kwargs=None):
+    from repro.optim import adamw
+
+    plan = cell.plan
+    pspecs = _in_specs_for_params(cell)
+    bstruct, bspecs = batch_struct(cell)
+    lr_kwargs = lr_kwargs or {}
+
+    def smap_body(stage_p, g, batch):
+        ctx = cell.ctx()
+        stage_p = _squeeze_lead(stage_p, 1)
+        tokens = _squeeze_lead(batch["tokens"], 2)
+        labels = _squeeze_lead(batch["labels"], 2)
+        context = (_squeeze_lead(batch["context"], 2)
+                   if "context" in batch else None)
+
+        def loss_fn(stage_p, g, tok, lab, ctxt):
+            out = run_pipeline(cell, ctx, stage_p, g, tok, lab, ctxt,
+                               with_loss=True)
+            num = ctx.psum_loss_all(out["loss"])
+            den = ctx.psum_loss_all(out["denom"])
+            aux = ctx.psum_loss_all(out["aux"])
+            loss = num / jnp.maximum(den, 1.0)
+            if cell.cfg.moe is not None:
+                loss = loss + 0.01 * aux / (cell.data_size * cell.pods
+                                            * cell.plan.sp * cell.sched.n
+                                            * max(1, cell.mdef.n_slots))
+            return loss
+
+        A = plan.grad_accum
+        if A > 1:
+            Bm = tokens.shape[0] // A
+            tks = tokens.reshape(A, Bm, -1)
+            lbs = labels.reshape(A, Bm, -1)
+            cxs = (context.reshape((A, Bm) + context.shape[1:])
+                   if context is not None else None)
+
+            def acc_step(carry, xs):
+                gsum, lsum = carry
+                tok, lab, cx = xs
+                l, gr = jax.value_and_grad(loss_fn, argnums=(0, 1))(
+                    stage_p, g, tok, lab, cx)
+                gsum = jax.tree_util.tree_map(
+                    lambda a, b: a + b.astype(a.dtype), gsum, gr)
+                return (gsum, lsum + l), None
+
+            zeros = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), (stage_p, g))
+            (grads, loss), _ = jax.lax.scan(
+                acc_step, (zeros, jnp.float32(0.0)),
+                (tks, lbs, cxs if cxs is not None else jnp.zeros((A, Bm))))
+            loss = loss / A
+            grads = jax.tree_util.tree_map(lambda a: a / A, grads)
+        else:
+            loss, grads = jax.value_and_grad(loss_fn, argnums=(0, 1))(
+                stage_p, g, tokens, labels, context)
+        # stage grads reduce over dp replicas; global grads over all stages
+        g_stage = ctx.psum_grads(grads[0])
+        g_glob = ctx.psum_globals(grads[1])
+        g_st = jax.tree_util.tree_map(lambda a: a[None], g_stage)
+        return loss, g_st, g_glob
+
+    smapped = shard_map(
+        smap_body, mesh,
+        in_specs=(pspecs["stages"], pspecs["globals"], bspecs),
+        out_specs=(P(), pspecs["stages"], pspecs["globals"]))
+
+    def train_step(params, opt_state, batch):
+        loss, gs, gg = smapped(params["stages"], params["globals"], batch)
+        grads = {"stages": gs, "globals": gg}
+        lr = adamw.cosine_lr(opt_state.step, **lr_kwargs)
+        new_p, new_o, met = adamw.apply_update(params, grads, opt_state, lr=lr)
+        met["loss"] = loss
+        return new_p, new_o, met
+
+    return train_step
+
+
+# ---------------------------------------------------------------------------
+# prefill_step / serve_step
+# ---------------------------------------------------------------------------
+
+
+def make_prefill_step(cell: Cell, mesh):
+    pspecs = _in_specs_for_params(cell)
+    bstruct, bspecs = batch_struct(cell)
+    _, sstruct, sspecs = _serve_state(cell)
+
+    def smap_body(stage_p, g, batch):
+        ctx = cell.ctx()
+        stage_p = _squeeze_lead(stage_p, 1)
+        tokens = _squeeze_lead(batch["tokens"], 2)
+        context = (_squeeze_lead(batch["context"], 2)
+                   if "context" in batch else None)
+        out = run_pipeline(cell, ctx, stage_p, g, tokens, tokens, context,
+                           with_loss=False)
+        state = jax.tree_util.tree_map(lambda a: a[None], out["state"])
+        return state, out["last_x"][None]
+
+    d = cell.cfg.d_model
+    last_spec = P("data", None, None, None)
+    smapped = shard_map(
+        smap_body, mesh,
+        in_specs=(pspecs["stages"], pspecs["globals"], bspecs),
+        out_specs=(sspecs, last_spec))
+
+    def prefill_step(params, batch):
+        return smapped(params["stages"], params["globals"], batch)
+
+    return prefill_step, sstruct, sspecs
+
+
+def make_serve_step(cell: Cell, mesh):
+    pspecs = _in_specs_for_params(cell)
+    bstruct, bspecs = batch_struct(cell)
+    _, sstruct, sspecs_g = _serve_state(cell)
+    sspecs = sspecs_g
+
+    plan = cell.plan
+    S = cell.shape.seq_len
+    sp = plan.sp
+
+    def smap_body(stage_p, g, state, batch):
+        ctx = cell.ctx()
+        stage_p = _squeeze_lead(stage_p, 1)
+        state = _squeeze_lead(state, 1)
+        tokens = _squeeze_lead(batch["tokens"], 2)   # [B_loc, 1]
+        pos = batch["pos"]                            # [] global position
+        rank = ctx.model_index()
+        base = S // sp
+        idx = pos - S
+        my_slot = jnp.where((idx % sp) == rank, base + idx // sp, -1)
+        meta = ChunkMeta(
+            q_pos=jnp.full((1,), pos, jnp.int32), cache_off=0,
+            kv_view=cell.cache_loc, tag=ofl.null_tag, decode=True,
+            my_slot=my_slot)
+
+        def one_micro(state_m, tok_m):
+            x = cell.mdef.embed(g, tok_m, jnp.full((1,), pos, jnp.int32),
+                                ctx, decode=True)
+            x, state_m, _ = cell.mdef.stage_apply(
+                stage_p, state_m, x, ctx, meta, g, offload=False,
+                remat="none")
+            return state_m, x
+
+        if plan.pp == 1:
+            state, x = one_micro(state, tokens)
+            logits = cell.mdef.head_logits(g, x, ctx)
+            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        else:
+            # Microbatch pipeline over the batch dim, as a lax.scan over
+            # ticks so the per-stage cache is threaded (double-buffered)
+            # instead of copied once per unrolled tick.
+            M = plan.decode_microbatch
+            Bm = tokens.shape[0] // M
+            stage = ctx.stage_index()
+            n_ticks = M + plan.pp - 1
+
+            def tick(carry_t, t):
+                state, carry, nxt = carry_t
+                m_my = jnp.clip(t - stage, 0, M - 1)
+                boff = m_my * Bm
+                state_m = jax.tree_util.tree_map(
+                    lambda a: (jax.lax.dynamic_slice_in_dim(a, boff, Bm,
+                                                            axis=1)
+                               if a.ndim >= 3 else a), state)
+                tok_m = jax.lax.dynamic_slice_in_dim(
+                    tokens, jnp.clip(t, 0, M - 1) * Bm, Bm, axis=0)
+                x0 = cell.mdef.embed(g, tok_m,
+                                     jnp.full((1,), pos, jnp.int32),
+                                     ctx, decode=True)
+                h = jnp.where(stage == 0, x0, carry)
+                x, state_m, _ = cell.mdef.stage_apply(
+                    stage_p, state_m, h, ctx, meta, g, offload=False,
+                    remat="none")
+                state = jax.tree_util.tree_map(
+                    lambda a, am: (jax.lax.dynamic_update_slice_in_dim(
+                        a, am, boff, axis=1) if a.ndim >= 3 else am),
+                    state, state_m)
+                logits = cell.mdef.head_logits(g, x, ctx)
+                tok_new = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+                # only the last stage's sample on a valid drain tick is real
+                m_last = t - (plan.pp - 1)
+                valid = (m_last >= 0) & (stage == plan.pp - 1)
+                off_l = jnp.clip(m_last, 0, M - 1) * Bm
+                cur = jax.lax.dynamic_slice_in_dim(nxt, off_l, Bm, axis=0)
+                nxt = jax.lax.dynamic_update_slice_in_dim(
+                    nxt, jnp.where(valid, tok_new, cur), off_l, axis=0)
+                carry = ctx.ppermute_stage(x, ctx.next_stage_perm())
+                return (state, carry, nxt), None
+
+            carry0 = jnp.zeros((Bm, 1, cell.cfg.d_model), cell.dtype)
+            nxt0 = jnp.zeros((tokens.shape[0], 1), jnp.int32)
+            (state, _, nxt), _ = jax.lax.scan(
+                tick, (state, carry0, nxt0),
+                jnp.arange(n_ticks, dtype=jnp.int32))
+        state = jax.tree_util.tree_map(lambda a: a[None], state)
+        return state, nxt[None]
+
+    tok_out_spec = P("data", None, None)
+    smapped = shard_map(
+        smap_body, mesh,
+        in_specs=(pspecs["stages"], pspecs["globals"], sspecs, bspecs),
+        out_specs=(sspecs, tok_out_spec))
+
+    def serve_step(params, state, batch):
+        return smapped(params["stages"], params["globals"], state, batch)
+
+    return serve_step, sstruct, sspecs
+
+
+def _serve_state(cell: Cell):
+    """State struct/specs for decode (global arrays passed between steps)."""
+    ctx = Ctx(sp=cell.plan.sp, dp=cell.plan.dp, pp=cell.plan.pp)
+
+    def f(k):
+        stage_p = cell.mdef.init_stage_params(k, 0, cell.plan.pp, cell.dtype)
+        g = cell.mdef.init_globals(k, cell.dtype)
+        cfgc = cell.cfg
+        ctxt = None
+        if cfgc.cross_attn is not None:
+            n_ctx = (cfgc.n_frames if cfgc.encoder_layers
+                     else cfgc.cross_attn.n_context_tokens)
+            n_loc = (-(-n_ctx // cell.plan.sp) * cell.plan.sp) // cell.plan.sp
+            ctxt = jnp.zeros((cell.b_loc, n_loc, cfgc.d_model), cell.dtype)
+            if cfgc.encoder_layers:
+                ctxt = cell.mdef.encode(g, ctxt, ctx)
+        return cell.mdef.init_state(stage_p, g, ctx, cell.b_loc,
+                                    cell.cache_loc, cell.dtype, context=ctxt)
+
+    local = jax.eval_shape(f, jax.ShapeDtypeStruct((2,), jnp.uint32))
+    struct = jax.tree_util.tree_map(
+        lambda s: jax.ShapeDtypeStruct((cell.data_size,) + s.shape, s.dtype),
+        local)
+    specs = jax.tree_util.tree_map(
+        lambda s: P(*(("data",) + (None,) * s.ndim)), local)
+    return local, struct, specs

@@ -1,0 +1,94 @@
+"""Fault tolerance & straggler mitigation for long-running training.
+
+Pieces (DESIGN.md §7):
+  * ``StepWatchdog`` — rolling-percentile step-time monitor; flags stragglers
+    (slow steps attributed to host/stage) and can trip a restart when a step
+    exceeds ``timeout_factor`` x the median (hung collective / dead host).
+  * ``RestartSupervisor`` — wraps the train loop; on watchdog trip or crash
+    it checkpoints (if possible) and re-enters from the latest committed
+    checkpoint.  Restart with a different device count re-derives the
+    ParallelPlan (elastic dp) — the stage-major layout is dp-invariant.
+  * preemption hooks — SIGTERM triggers checkpoint-and-exit (cloud TPU
+    maintenance events surface as SIGTERM).
+"""
+from __future__ import annotations
+
+import collections
+import logging
+import signal
+import statistics
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+log = logging.getLogger("repro.ft")
+
+
+class StepWatchdog:
+    def __init__(self, *, window: int = 50, straggler_factor: float = 1.5,
+                 timeout_factor: float = 10.0, min_samples: int = 10):
+        self.times = collections.deque(maxlen=window)
+        self.straggler_factor = straggler_factor
+        self.timeout_factor = timeout_factor
+        self.min_samples = min_samples
+        self.stragglers = 0
+        self.trips = 0
+
+    def observe(self, step: int, dt: float) -> str:
+        """Returns 'ok' | 'straggler' | 'timeout'."""
+        verdict = "ok"
+        if len(self.times) >= self.min_samples:
+            med = statistics.median(self.times)
+            if dt > self.timeout_factor * med:
+                self.trips += 1
+                verdict = "timeout"
+                log.error("step %d took %.2fs (median %.2fs) — tripping "
+                          "restart", step, dt, med)
+            elif dt > self.straggler_factor * med:
+                self.stragglers += 1
+                verdict = "straggler"
+                log.warning("step %d straggled: %.2fs vs median %.2fs",
+                            step, dt, med)
+        self.times.append(dt)
+        return verdict
+
+
+@dataclass
+class RestartSupervisor:
+    checkpointer: "object"            # checkpoint.Checkpointer
+    max_restarts: int = 3
+    on_preempt: Optional[Callable] = None
+    _preempted: bool = field(default=False, init=False)
+
+    def install_signal_handlers(self):
+        def handler(signum, frame):
+            log.warning("received signal %s — requesting checkpoint+exit",
+                        signum)
+            self._preempted = True
+        signal.signal(signal.SIGTERM, handler)
+
+    @property
+    def preempted(self) -> bool:
+        return self._preempted
+
+    def run(self, loop_fn: Callable[[int], None], start_step: int = 0):
+        """loop_fn(resume_step) runs the training loop until completion or
+        raises; we restart from the latest committed checkpoint."""
+        restarts = 0
+        step = start_step
+        while True:
+            try:
+                loop_fn(step)
+                return
+            except KeyboardInterrupt:
+                raise
+            except Exception as e:  # noqa
+                restarts += 1
+                if restarts > self.max_restarts:
+                    log.error("exceeded max restarts (%d); giving up",
+                              self.max_restarts)
+                    raise
+                latest = self.checkpointer.latest_step()
+                step = 0 if latest is None else latest
+                log.error("train loop failed (%s); restart %d from step %d",
+                          e, restarts, step)

@@ -1,0 +1,36 @@
+"""Training metrics: TGS (paper's metric), MFU, step-time stats."""
+from __future__ import annotations
+
+import json
+import time
+from dataclasses import dataclass, field
+from typing import Optional
+
+from repro.core.costmodel import Hardware, V5E
+
+
+@dataclass
+class Meter:
+    n_chips: int
+    tokens_per_step: int
+    n_active_params: int
+    hw: Hardware = V5E
+    history: list = field(default_factory=list)
+    _t0: Optional[float] = None
+
+    def start(self):
+        self._t0 = time.perf_counter()
+
+    def stop(self, step: int, loss: float) -> dict:
+        dt = time.perf_counter() - self._t0
+        tgs = self.tokens_per_step / dt / self.n_chips  # tokens/chip/s (§7)
+        mfu = (6 * self.n_active_params * self.tokens_per_step / dt
+               / (self.n_chips * self.hw.peak_flops_bf16))
+        rec = {"step": step, "loss": float(loss), "dt": dt,
+               "tgs": tgs, "mfu": mfu}
+        self.history.append(rec)
+        return rec
+
+    def dump(self, path: str):
+        with open(path, "w") as f:
+            json.dump(self.history, f, indent=1)

@@ -1,0 +1,21 @@
+"""Shared fixtures. NOTE: device count must stay 1 here (the dry-run sets
+its own 512-device flag in its own process); distributed tests spawn their
+fake-device meshes via XLA_FLAGS in subprocess or use the 8-device session
+started by tests that need it."""
+import os
+
+# distributed integration tests need a handful of fake devices; smoke tests
+# and benches are written against whatever the session provides, so a small
+# fixed count keeps both worlds working in one pytest process.
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import jax  # noqa: E402
+
+import pytest  # noqa: E402
+
+
+@pytest.fixture(scope="session")
+def eight_devices():
+    if len(jax.devices()) < 8:
+        pytest.skip("needs 8 fake CPU devices (XLA_FLAGS was preset)")
+    return jax.devices()[:8]

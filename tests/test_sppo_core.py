@@ -1,0 +1,222 @@
+"""Unit + hypothesis property tests for the paper's core math:
+partitioning (§3.2), sequence-aware offloading (§5.2), pipeline schedule &
+MSP (§3.3/§6), heuristic solver (§6.1)."""
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import get_config
+from repro.core import costmodel as cm
+from repro.core import offload as ofl
+from repro.core import partition as part
+from repro.core import schedule as sched
+from repro.core import solver
+
+
+# ---------------------------------------------------------------------------
+# Partitioning
+# ---------------------------------------------------------------------------
+
+
+@given(st.integers(3, 9), st.integers(1, 16),
+       st.floats(1e-6, 1e-2))
+@settings(max_examples=60, deadline=None)
+def test_partition_flops_properties(log_seq, n, r):
+    seq = 1 << (log_seq + 5)  # 256..16K
+    n = min(n, seq // 16)
+    s = part.partition_flops(seq, n, r, multiple=16)
+    assert sum(s.lengths) == seq
+    assert all(l > 0 and l % 16 == 0 for l in s.lengths)
+    assert s.offsets[0] == 0
+    assert all(s.offsets[i + 1] == s.offsets[i] + s.lengths[i]
+               for i in range(n - 1))
+
+
+def test_flops_balance_beats_length_balance():
+    """The FLOPs-balanced partition equalizes chunk compute (Fig. 4)."""
+    cfg = get_config("sppo-gpt-7b")
+    r = part.flops_per_token_ratio(cfg)
+    seq, n = 131072, 16
+    fl = part.partition(seq, n, cfg, "flops", multiple=16)
+    ln = part.partition(seq, n, cfg, "length", multiple=16)
+    imb_f = part.imbalance(part.chunk_costs(fl, r))
+    imb_l = part.imbalance(part.chunk_costs(ln, r))
+    assert imb_f < 1.05            # balanced within 5%
+    assert imb_l > 1.5             # length-based is badly imbalanced
+    # earlier chunks are longer (activation imbalance, Fig. 5)
+    assert fl.lengths[0] > fl.lengths[-1]
+
+
+def test_linear_profile_degenerates_to_length():
+    cfg = get_config("rwkv6-3b")  # attention-free
+    assert part.flops_per_token_ratio(cfg) == 0.0
+    s = part.partition(4096, 8, cfg, "flops", multiple=16)
+    assert s.policy == "length"
+    assert len(set(s.lengths)) == 1
+
+
+# ---------------------------------------------------------------------------
+# Sequence-aware offloading (§5.2)
+# ---------------------------------------------------------------------------
+
+
+def _flops_balanced_case(n=8, seq=131072):
+    cfg = get_config("sppo-gpt-7b")
+    r = part.flops_per_token_ratio(cfg)
+    s = part.partition(seq, n, cfg, "flops", multiple=16)
+    costs = part.chunk_costs(s, r)
+    t_unit = 1e-3 / max(costs)
+    times = [c * t_unit for c in costs]
+    acts = [l * 1e4 for l in s.lengths]  # bytes ∝ tokens
+    return acts, times
+
+
+def test_alpha_invariant_flops_balanced():
+    """Paper invariant (§5.2): under FLOPs-balanced chunks the offloaded
+    volume is constant — α_{i-1}A_{i-1} = α_iA_i = M_threshold — wherever
+    α < 1, and α orders *inversely* to activation size (the paper writes
+    s_0 ≤ s_1 ≤ … paired with α_0 ≥ α_1 ≥ …: the smallest chunk offloads
+    the largest fraction).  In time order, causal FLOPs balance makes
+    earlier chunks longer, so α grows along the sequence."""
+    acts, times = _flops_balanced_case()
+    bw = 0.3 * acts[0] / times[1]  # partial-offload regime
+    plan = ofl.sequence_aware_alphas(acts, times, bw)
+    prods = [a * al for a, al in zip(acts, plan.alphas)]
+    interior = [p for p, al in zip(prods[:-1], plan.alphas[:-1]) if al < 1.0]
+    assert max(interior) - min(interior) < 0.05 * max(interior)
+    # inverse ordering vs activation volume (excluding the forced-0 tail)
+    pairs = sorted(zip(acts[:-1], plan.alphas[:-1]))
+    assert all(pairs[i][1] >= pairs[i + 1][1] - 1e-9
+               for i in range(len(pairs) - 1))
+    assert plan.alphas[-1] == 0.0  # last chunk never offloads
+
+
+@given(st.integers(2, 24), st.floats(1e4, 1e9), st.floats(0.1, 10.0))
+@settings(max_examples=60, deadline=None)
+def test_alpha_bounds_and_peak(n, bw, scale):
+    acts = [(n - i) * 1e5 * scale for i in range(n)]
+    times = [1e-3] * n
+    plan = ofl.sequence_aware_alphas(acts, times, bw)
+    assert all(0.0 <= a <= 1.0 for a in plan.alphas)
+    # peak memory is never worse than keeping everything resident
+    assert plan.peak_units <= sum(acts) + 1e-6
+    # ... and full offload (bw -> inf) approaches the two-chunk bound
+    full = ofl.peak_memory(acts, [1.0] * n)
+    assert full <= max(acts[i] + acts[i + 1] for i in range(n - 1)) + 1e-6
+
+
+def test_memory_recurrence_matches_paper():
+    """M_i = M_{i-1} + A_i − α_{i-1}A_{i-1} — explicit small case."""
+    acts = [4.0, 3.0, 2.0, 1.0]
+    alphas = [1.0, 1.0, 0.5, 0.0]
+    # manual recurrence: peaks at 4; 4-4+3=3; 3-3+2=2; 2-1+1=2 ...
+    peak = ofl.peak_memory(acts, alphas)
+    m, prev, expect_peak = 0.0, 0.0, 0.0
+    for a, al in zip(acts, alphas):
+        m += a
+        expect_peak = max(expect_peak, m)
+        m -= prev
+        prev = al * a
+    assert peak == expect_peak
+
+
+# ---------------------------------------------------------------------------
+# Pipeline schedule + MSP (§3.3, §6.2)
+# ---------------------------------------------------------------------------
+
+
+def test_bubble_formula():
+    # paper's example: p=4, N=16 -> ratio 3/16
+    assert sched.bubble_ratio(4, 16) == pytest.approx(3 / 16)
+    f_n = 1.0
+    assert sched.total_time(4, 16, f_n) == pytest.approx((3 + 16) / 16)
+
+
+def test_msp_table_3():
+    """Reproduce the paper's Table 3 (PP=4, N=8) exactly."""
+    t = sched.msp_phase_table(4, 8)
+    assert t[0]["left"] == {0, 1, 2}
+    assert t[1]["left"] == {0, 1}
+    assert t[2]["left"] == {0}
+    assert t[3]["left"] == set()
+    assert t[0]["steady"] == {3, 4, 5, 6, 7}
+    assert t[1]["steady"] == {2, 3, 4, 5, 6}
+    assert t[3]["steady"] == {0, 1, 2, 3, 4}
+    assert t[1]["right"] == {7}
+    assert t[2]["right"] == {6, 7}
+    assert t[3]["right"] == {5, 6, 7}
+    assert t[0]["left_sp_range"] == {0, 1, 2, 3}
+    assert t[1]["left_sp_range"] == {1, 2, 3}
+    assert t[2]["left_sp_range"] == {2, 3}
+    assert t[3]["left_sp_range"] == set()
+    assert t[1]["right_sp_range"] == {0, 1}
+    assert t[2]["right_sp_range"] == {0, 1, 2}
+    assert t[3]["right_sp_range"] == {0, 1, 2, 3}
+
+
+@given(st.integers(2, 8), st.integers(2, 64))
+@settings(max_examples=80, deadline=None)
+def test_msp_phases_partition_chunks(pp, n):
+    if n < pp:
+        return
+    for s in range(pp):
+        left = sched.left_sp_ids(pp, n, s)
+        steady = sched.steady_ids(pp, n, s)
+        right = sched.right_sp_ids(pp, n, s)
+        assert left | steady | right == set(range(n))
+        assert not (left & steady) and not (steady & right) \
+            and not (left & right)
+        assert len(steady) == n - (pp - 1)
+
+
+@given(st.integers(2, 8), st.integers(4, 64), st.integers(2, 4))
+@settings(max_examples=60, deadline=None)
+def test_msp_reduces_total_time(pp, n, split):
+    if n < 2 * pp:
+        return
+    f_n = 1.0
+    base = sched.total_time(pp, n, f_n)
+    msp = sched.msp_total_time(pp, n, f_n, split)
+    assert msp < base
+    # work conserved: only the bubble shrinks
+    assert msp >= f_n
+
+
+def test_msp_ramp_schedule_events():
+    ev = sched.msp_ramp_schedule(8, 4, split=2)
+    # first/last 3 chunks split in 2, middle 2 whole: 3*2 + 2 + 3*2 = 14
+    assert len(ev) == 14
+    assert [e[0] for e in ev[:2]] == [0, 0]
+    covered = {}
+    for c, s, ns in ev:
+        covered.setdefault(c, []).append((s, ns))
+    assert set(covered) == set(range(8))
+    for c, subs in covered.items():
+        ns = subs[0][1]
+        assert [x[0] for x in subs] == list(range(ns))
+
+
+# ---------------------------------------------------------------------------
+# Heuristic solver (§6.1)
+# ---------------------------------------------------------------------------
+
+
+def test_solver_feasible_and_bubble_sane():
+    cfg = get_config("sppo-gpt-7b")
+    res = solver.solve(cfg, seq_len=524288, batch=1, n_params=6_700_000_000)
+    assert 16 % res.pp == 0
+    assert res.n_chunks >= res.pp or res.pp == 1
+    assert 0 <= res.bubble_ratio < 1
+    assert len(res.alphas) == res.n_chunks
+    # candidates must include the chosen point
+    assert any(pp == res.pp and n == res.n_chunks
+               for pp, n, _ in res.candidates)
+
+
+def test_solver_prefers_more_chunks_for_longer_sequences():
+    cfg = get_config("sppo-gpt-7b")
+    short = solver.solve(cfg, 65536, 1, 6_700_000_000)
+    long = solver.solve(cfg, 1048576, 1, 6_700_000_000)
+    assert long.n_chunks >= short.n_chunks

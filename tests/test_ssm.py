@@ -1,0 +1,146 @@
+"""SSM mixers vs sequential recurrence oracles (exact math, fp64-ish fp32).
+
+The chunked SSD (Mamba2) and chunked WKV6 (RWKV) implementations must equal
+a token-by-token recurrence, including across chunk boundaries (the SPPO
+state carry) and across sequence shards (the cross-rank composition)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config
+from repro.models import ssm as S
+from repro.parallel.ctx import SINGLE
+
+
+def _mamba_ref(x, p, cfg):
+    """Sequential SSD recurrence (single device, full heads)."""
+    ssm = cfg.ssm
+    d_in = ssm.expand * cfg.d_model
+    H = d_in // ssm.head_dim
+    hd, ds = ssm.head_dim, ssm.d_state
+    B, T, _ = x.shape
+    xs = x @ p["in_x"]
+    bc = x @ p["in_bc"]
+    dt = x @ p["in_dt"] + p["dt_bias"]
+    z = x @ p["in_z"]
+    kern = jnp.concatenate([p["conv_x"], p["conv_bc"]], axis=-1)
+    conv_in = jnp.concatenate([xs, bc], axis=-1)
+    W = kern.shape[0]
+    pad = jnp.concatenate([jnp.zeros((B, W - 1, conv_in.shape[-1]),
+                                     conv_in.dtype), conv_in], axis=1)
+    conv = sum(pad[:, i:i + T] * kern[i][None, None] for i in range(W))
+    conv = jax.nn.silu(conv)
+    xs = conv[..., :d_in]
+    Bm = conv[..., d_in:d_in + ds].astype(jnp.float32)
+    Cm = conv[..., d_in + ds:].astype(jnp.float32)
+    dt = jax.nn.softplus(dt.astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    xh = xs.reshape(B, T, H, hd).astype(jnp.float32)
+
+    Sst = jnp.zeros((B, H, hd, ds), jnp.float32)
+    ys = []
+    for t in range(T):
+        da = jnp.exp(dt[:, t] * A[None, :])                       # [B,H]
+        Sst = Sst * da[:, :, None, None] + jnp.einsum(
+            "bh,bhd,bn->bhdn", dt[:, t], xh[:, t], Bm[:, t])
+        ys.append(jnp.einsum("bhdn,bn->bhd", Sst, Cm[:, t]))
+    y = jnp.stack(ys, axis=1)
+    y = y + xh * p["D"].astype(jnp.float32)[None, None, :, None]
+    yg = (y.reshape(B, T, d_in)
+          * jax.nn.silu(z.astype(jnp.float32))).reshape(B, T, H, hd)
+    var = jnp.mean(yg * yg, axis=-1, keepdims=True)
+    yg = yg * jax.lax.rsqrt(var + 1e-6)
+    yn = (yg.reshape(B, T, d_in)
+          * (1.0 + p["norm_scale"].astype(jnp.float32))).astype(x.dtype)
+    return yn @ p["out"], Sst
+
+
+@pytest.mark.parametrize("T,nchunks", [(32, 1), (64, 2), (96, 3)])
+def test_mamba2_chunked_equals_recurrence(T, nchunks):
+    cfg = get_config("zamba2-7b").reduced()
+    from repro.models.model_zoo import _mamba, _key
+    key = jax.random.PRNGKey(0)
+    p = _mamba(key, cfg, jnp.float32)
+    B = 2
+    x = jax.random.normal(jax.random.PRNGKey(1), (B, T, cfg.d_model),
+                          jnp.float32) * 0.5
+    want, want_state = _mamba_ref(x, p, cfg)
+
+    state = S.mamba2_init_state(cfg, B, 1)
+    outs = []
+    cl = T // nchunks
+    for c in range(nchunks):
+        y, state = S.mamba2_mixer(x[:, c * cl:(c + 1) * cl], p, cfg, SINGLE,
+                                  state, subchunk=16)
+        outs.append(y)
+    got = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(state.ssm), np.asarray(want_state),
+                               rtol=2e-4, atol=2e-4)
+
+
+def _rwkv_ref_timemix(x, p, cfg, state):
+    """Token-by-token WKV6 recurrence."""
+    H, dk = cfg.n_heads, cfg.hd
+    dv = dk
+    B, T, d = x.shape
+    xf = x.astype(jnp.float32)
+    xprev = jnp.concatenate([state.shift_t.astype(jnp.float32), xf[:, :-1]],
+                            axis=1)
+    xx = xprev - xf
+    xbar = xf + xx * p["mu_x"]
+    lora = jnp.tanh(xbar @ p["ddl_a"]) @ p["ddl_b"]
+    lam = lora.reshape(B, T, 5, d) + p["mu_rkvwg"][None, None]
+    xr, xk, xv, xw, xg = [(xf + xx * lam[:, :, i]) for i in range(5)]
+    r = (xr @ p["wr"]).reshape(B, T, H, dk).astype(jnp.float32)
+    k = (xk @ p["wk"]).reshape(B, T, H, dk).astype(jnp.float32)
+    v = (xv @ p["wv"]).reshape(B, T, H, dv).astype(jnp.float32)
+    g = jax.nn.silu(xg @ p["wg"])
+    dd = p["w0"][None, None] + jnp.tanh(xw @ p["dec_a"]) @ p["dec_b"]
+    w = jnp.exp(-jnp.exp(dd.astype(jnp.float32))).reshape(B, T, H, dk)
+    u = p["u"].reshape(H, dk).astype(jnp.float32)
+
+    Sst = state.wkv
+    ys = []
+    for t in range(T):
+        kv = jnp.einsum("bhc,bhv->bhcv", k[:, t], v[:, t])
+        ys.append(jnp.einsum("bhc,bhcv->bhv", r[:, t],
+                             Sst + u[None, :, :, None] * kv))
+        Sst = Sst * w[:, t][..., None] + kv
+    y = jnp.stack(ys, axis=1)
+    mu = jnp.mean(y, axis=-1, keepdims=True)
+    var = jnp.var(y, axis=-1, keepdims=True)
+    y = (y - mu) * jax.lax.rsqrt(var + 64e-5)
+    y = y.reshape(B, T, H * dv) * p["ln_x_scale"] + p["ln_x_bias"]
+    y = (y * g).astype(x.dtype)
+    return y @ p["wo"], Sst
+
+
+@pytest.mark.parametrize("T,nchunks", [(32, 1), (64, 2)])
+def test_rwkv6_chunked_equals_recurrence(T, nchunks):
+    cfg = get_config("rwkv6-3b").reduced()
+    from repro.models.model_zoo import _rwkv_tmix
+    key = jax.random.PRNGKey(0)
+    p = _rwkv_tmix(key, cfg, jnp.float32)
+    B = 2
+    x = jax.random.normal(jax.random.PRNGKey(1), (B, T, cfg.d_model),
+                          jnp.float32) * 0.5
+    st0 = S.rwkv6_init_state(cfg, B, 1)
+    want, want_state = _rwkv_ref_timemix(x, p, cfg, st0)
+
+    state = st0
+    outs = []
+    cl = T // nchunks
+    for c in range(nchunks):
+        y, state = S.rwkv6_time_mix(x[:, c * cl:(c + 1) * cl], p, cfg,
+                                    SINGLE, state, subchunk=8)
+        outs.append(y)
+    got = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=3e-4, atol=3e-4)
+    np.testing.assert_allclose(np.asarray(state.wkv),
+                               np.asarray(want_state), rtol=3e-4, atol=3e-4)
