@@ -18,10 +18,7 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 import argparse
 import json
 
-import jax
 
-from repro.configs.base import SHAPES
-from repro.core import costmodel as cm
 from repro.launch.mesh import make_production_mesh
 from repro.launch.dryrun import run_cell
 from benchmarks.roofline import analyze_record

@@ -16,9 +16,9 @@ from __future__ import annotations
 
 import json
 import sys
-from typing import Dict, List, Optional
+from typing import Optional
 
-from repro.configs.base import SHAPES, get_config
+from repro.configs.base import SHAPES
 from repro.core import costmodel as cm
 from repro.models.model_zoo import build_model
 from repro.parallel import specs as SP

@@ -31,6 +31,8 @@ def main() -> None:
         ("bench_e2e", figures.bench_e2e),
         ("bench_breakdown", figures.bench_breakdown),
         ("bench_seqscale", figures.bench_seqscale),
+        ("bench_schedule_sim",
+         lambda: figures.bench_schedule_sim(measure=not args.fast)),
         ("bench_solver", figures.bench_solver),
     ]
     all_rows = []

@@ -8,7 +8,7 @@ mesh (see parallel/plans.py for the solver-assisted defaults).
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Optional, Tuple
 
 # ---------------------------------------------------------------------------
@@ -177,6 +177,7 @@ class ParallelPlan:
     partition: str = "flops"   # flops | length  (SPPO sequence partitioning)
     offload: bool = True       # adaptive activation offload to pinned_host
     msp: bool = False          # multiplexed sequence partitioning (ramp chunks)
+    msp_split: int = 2         # sub-chunks per ramp chunk (DESIGN.md §2)
     remat: str = "sppo"        # sppo | full | none
     zero1: bool = True         # shard optimizer states over dp (and pod)
     opt_dtype: str = "float32"  # moment dtype; deepseek uses bfloat16
@@ -198,6 +199,8 @@ class ParallelPlan:
             f"dp({self.dp}) * pp({self.pp}) must equal data axis ({data_size})")
         assert self.sp == model_size, (
             f"sp({self.sp}) must equal model axis ({model_size})")
+        assert not self.msp or self.msp_split >= 2, (
+            f"msp_split({self.msp_split}) must be >= 2 (sub-chunks per ramp)")
 
 
 # ---------------------------------------------------------------------------

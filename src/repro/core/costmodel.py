@@ -26,6 +26,11 @@ class Hardware:
 
 V5E = Hardware()
 
+# backward/forward FLOPs split of the lumped 6N train convention (2N fwd,
+# 4N bwd): the D2H hiding window of §5.2 is the *forward* compute of the
+# next chunk, so offload planning divides lumped chunk times by (1 + this)
+BWD_RATIO = 2.0
+
 # A100-80G — used to sanity-check the paper's own numbers (Figs. 10-12)
 A100 = Hardware(name="a100-80g", peak_flops_bf16=312e12, hbm_bw=2039e9,
                 ici_bw=300e9, d2h_bw=32e9, hbm_bytes=80 * 2**30)

@@ -22,15 +22,12 @@ simulated by ``peak_memory`` and asserted in tests.
 """
 from __future__ import annotations
 
-import functools
 from dataclasses import dataclass
-from typing import List, Sequence
+from typing import Sequence
 
 import jax
-import jax.numpy as jnp
 from jax.ad_checkpoint import checkpoint_name
 
-from repro.core.partition import ChunkSchedule, chunk_costs
 
 OFF_NAME = "act_off"
 KEEP_NAME = "act_keep"

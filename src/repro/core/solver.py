@@ -8,20 +8,21 @@ mesh — DESIGN.md §2):
   * per-chunk workload between MIN_CHUNK_TOKENS and MAX_CHUNK_TOKENS per
     device (the paper's 2K–16K/layer/device heuristic, Fig. 7).
 
-Objective: T(N, PP) = (PP−1+N)/N · F(N)  +  offload_overflow_penalty, where
-F(N) adds per-chunk kernel overheads (more chunks → more launches) and the
-penalty charges D2H time that cannot hide under compute (§5.2).
+Objective: every candidate (PP, N) is *played out* by the event-driven
+simulator (core/simulate.py, DESIGN.md §3): per-stage compute/P2P/D2H/H2D
+lanes over the FLOPs-weighted chunk costs, so the score includes fill/drain
+bubbles, steady-phase resynchronization, inter-stage hand-off time, and the
+unhidden-D2H stall that the closed-form T = (p−1+N)/N·F(N) cannot see.
 """
 from __future__ import annotations
 
-import math
 from dataclasses import dataclass
-from typing import List, Optional, Tuple
+from typing import List, Tuple
 
 from repro.core import costmodel as cm
-from repro.core import partition as part
 from repro.core import offload as ofl
-from repro.core.schedule import msp_total_time, total_time
+from repro.core import partition as part
+from repro.core import simulate as sim
 
 MIN_CHUNK_TOKENS = 2048
 MAX_CHUNK_TOKENS = 16384
@@ -39,53 +40,62 @@ class SolverResult:
 
 
 def iteration_time(cfg, seq_len: int, batch: int, n_params: int,
-                   pp: int, n: int, sp: int, dp: int,
+                   pp: int, n: int, sp: int,
                    hw: cm.Hardware = cm.V5E, *, msp: bool = False,
+                   msp_split: int = 2,
                    offload: bool = True) -> Tuple[float, tuple]:
-    """Estimated per-iteration wall time for one dp replica (seconds)."""
+    """Simulated per-iteration wall time for one dp replica (seconds)."""
+    t, alphas, _ = simulate_candidate(cfg, seq_len, batch, n_params, pp, n,
+                                      sp, hw, msp=msp, msp_split=msp_split,
+                                      offload=offload)
+    return t, alphas
+
+
+def simulate_candidate(cfg, seq_len: int, batch: int, n_params: int,
+                       pp: int, n: int, sp: int,
+                       hw: cm.Hardware = cm.V5E, *, msp: bool = False,
+                       msp_split: int = 2, offload: bool = True
+                       ) -> Tuple[float, tuple, sim.SimResult]:
+    """Build the candidate's cost/activation profile and play it out."""
     r = part.flops_per_token_ratio(cfg)
     sched = part.partition(seq_len, n, cfg, "length")
     costs = part.chunk_costs(sched, r)
     # convert relative costs to flops: linear term == per-token matmul flops
     tok_flops = cm.model_flops_per_token(n_params, train=True)
-    lin_total = seq_len  # relative linear units for the whole sequence
     scale = (batch * seq_len * tok_flops) / sum(costs)
     chunk_flops = [c * scale for c in costs]
     chips = sp * pp
-    times = [f / (chips * hw.peak_flops_bf16 / 1.0) +
+    times = [f / (chips * hw.peak_flops_bf16) +
              2 * cfg.n_layers / pp * hw.kernel_launch_us * 1e-6
              for f in chunk_flops]
-    f_n = sum(times)
-    t = msp_total_time(pp, n, f_n) if msp else total_time(pp, n, f_n)
     # offload: activation bytes per chunk (Type-1 ~ 34*B*s*H bf16 per layer)
-    act = [34 * batch * l * cfg.d_model * 2 * (cfg.n_layers / pp) / sp
-           for l in sched.lengths]
-    plan = ofl.sequence_aware_alphas(act, times, hw.d2h_bw)
-    if offload:
-        # unhidden D2H time: whatever α<1 left resident must either stay
-        # (memory) or stall; charge the stall for the fraction above HBM room
-        unhidden = sum(max(0.0, a * (1 - al) - 0.0) for a, al in
-                       zip(act, plan.alphas)) * 0.0
-        t = t + unhidden
-    return t, plan.alphas
+    act = [34 * batch * ln * cfg.d_model * 2 * (cfg.n_layers / pp) / sp
+           for ln in sched.lengths]
+    # the D2H window is the *forward* compute of the next chunk (§5.2)
+    fwd_times = [t / (1.0 + cm.BWD_RATIO) for t in times]
+    plan = ofl.sequence_aware_alphas(act, fwd_times, hw.d2h_bw)
+    alphas = plan.alphas if offload else tuple(0.0 for _ in act)
+    # per-device inter-stage hand-off payload: hidden states of the chunk
+    p2p = ([2 * batch * ln * cfg.d_model / sp for ln in sched.lengths]
+           if pp > 1 else None)
+    res = sim.simulate_schedule(
+        times, pp=pp, msp=msp, split=msp_split,
+        chunk_acts=act, alphas=alphas,
+        d2h_bw=hw.d2h_bw, p2p_bytes=p2p, ici_bw=hw.ici_bw,
+        bwd_ratio=cm.BWD_RATIO)
+    return res.total, alphas, res
 
 
 def solve(cfg, seq_len: int, batch: int, n_params: int,
           data_size: int = 16, model_size: int = 16,
-          hw: cm.Hardware = cm.V5E, *, msp: bool = False,
-          kind: str = "train") -> SolverResult:
-    """Search (PP, N) under the §6.1 heuristics."""
+          hw: cm.Hardware = cm.V5E, *, msp: bool = False) -> SolverResult:
+    """Search (PP, N) under the §6.1 heuristics, scoring by simulation."""
     sp = model_size
     best = None
     cands: List[Tuple[int, int, float]] = []
     pps = [p for p in (1, 2, 4, 8, 16) if data_size % p == 0]
     for pp in pps:
         if cfg.n_layers < pp:
-            continue
-        dp = data_size // pp
-        if batch % (dp if kind != "decode" else 1) and batch >= dp:
-            pass
-        if batch < dp and seq_len * batch // dp == 0:
             continue
         max_n = max(1, seq_len // (MIN_CHUNK_TOKENS))
         min_n = max(1, seq_len // (MAX_CHUNK_TOKENS * 4))
@@ -97,13 +107,13 @@ def solve(cfg, seq_len: int, batch: int, n_params: int,
             if seq_len % (n * sp):
                 continue
             t, alphas = iteration_time(cfg, seq_len, batch, n_params,
-                                       pp, n, sp, dp, hw, msp=msp)
+                                       pp, n, sp, hw, msp=msp)
             cands.append((pp, n, t))
             if best is None or t < best[2]:
                 best = (pp, n, t, alphas)
     if best is None:  # fall back: no chunking (short sequences)
         t, alphas = iteration_time(cfg, seq_len, batch, n_params, 1, 1,
-                                   sp, data_size, hw, msp=False)
+                                   sp, hw, msp=False)
         best = (1, 1, t, alphas)
         cands.append((1, 1, t))
     pp, n, t, alphas = best

@@ -17,7 +17,6 @@ kv_pos[j] != PAD_POS.  PAD_POS marks empty cache slots.
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

@@ -31,12 +31,10 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.configs.base import (ASSIGNED_ARCHS, SHAPES, cell_is_runnable,
                                 get_config)
 from repro.launch.mesh import make_production_mesh, mesh_dims
-from repro.models.model_zoo import build_model
 from repro.parallel import specs as SP
 from repro.parallel.runner import (Cell, batch_struct, make_prefill_step,
                                    make_serve_step, make_train_step,
-                                   resolve_cell, _serve_state,
-                                   _in_specs_for_params)
+                                   resolve_cell, _serve_state)
 
 
 # ---------------------------------------------------------------------------
@@ -76,7 +74,6 @@ def collective_bytes(hlo_text: str) -> dict:
         for k in kinds:
             if f"{k}-start" in body or re.search(rf"\b{k}\b", body.split("(")[0]):
                 # output shape(s) at the head of the instruction
-                head = body.split("=")[0] if "=" in body else body
                 shapes = shape_re.findall(body.split("(")[0])
                 b = 0
                 for dt, dims in shapes:

@@ -22,7 +22,6 @@ Costs tracked:
 """
 from __future__ import annotations
 
-import json
 import re
 from collections import defaultdict
 from dataclasses import dataclass, field

@@ -9,20 +9,29 @@ from __future__ import annotations
 import jax
 
 
+def compat_make_mesh(shape, axes):
+    """jax.make_mesh across jax versions: `axis_types` (and AxisType) only
+    exist on newer jax; older releases default every axis to Auto anyway."""
+    try:
+        return jax.make_mesh(shape, axes,
+                             axis_types=(jax.sharding.AxisType.Auto,)
+                             * len(axes))
+    except (AttributeError, TypeError):  # jax < 0.5: no AxisType
+        return jax.make_mesh(shape, axes)
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return compat_make_mesh(shape, axes)
 
 
 def make_test_mesh(data: int = 4, model: int = 2, pods: int = 1):
     """Small mesh for CPU integration tests."""
     if pods > 1:
-        return jax.make_mesh((pods, data, model), ("pod", "data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 3)
-    return jax.make_mesh((data, model), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        return compat_make_mesh((pods, data, model),
+                                ("pod", "data", "model"))
+    return compat_make_mesh((data, model), ("data", "model"))
 
 
 def mesh_dims(mesh) -> dict:

@@ -10,7 +10,6 @@ appends striped slots and samples greedily.
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import logging
 import time
 
@@ -20,7 +19,7 @@ import numpy as np
 from jax.sharding import NamedSharding
 
 from repro.configs.base import ShapeConfig, get_config
-from repro.launch.mesh import make_test_mesh, mesh_dims
+from repro.launch.mesh import make_test_mesh
 from repro.launch.train import build_params
 from repro.models.model_zoo import build_model
 from repro.parallel.runner import (batch_struct, make_prefill_step,
@@ -69,7 +68,6 @@ def main(argv=None):
     prompts = rng.integers(2, cfg.vocab_size,
                            size=(args.batch, S)).astype(np.int32)
     bstruct, bspecs = batch_struct(pre_cell)
-    dp = pre_cell.plan.dp
     b_loc = pre_cell.b_loc
     tok = np.stack([prompts[(i // pre_cell.plan.pp) * b_loc:
                             (i // pre_cell.plan.pp) * b_loc + b_loc]

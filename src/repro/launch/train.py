@@ -14,15 +14,12 @@ watchdog, TGS/MFU metering.
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import logging
-import os
-import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.sharding import NamedSharding
 
 from repro.checkpoint.checkpointer import Checkpointer
 from repro.configs.base import ShapeConfig, get_config
@@ -67,6 +64,14 @@ def main(argv=None):
     ap.add_argument("--pp", type=int, default=None)
     ap.add_argument("--n-chunks", type=int, default=None)
     ap.add_argument("--no-offload", action="store_true")
+    ap.add_argument("--msp", action="store_true",
+                    help="multiplexed sequence partitioning (pp > 1 only). "
+                         "NOTE: on the lock-step SPMD runner the ramp "
+                         "sub-chunks recompute their full chunk, so this "
+                         "validates the schedule but costs extra compute "
+                         "per step (DESIGN.md §2)")
+    ap.add_argument("--msp-split", type=int, default=2,
+                    help="sub-chunks per MSP ramp chunk")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=20)
     ap.add_argument("--resume", default="none", choices=["none", "auto"])
@@ -92,8 +97,17 @@ def main(argv=None):
         overrides["n_chunks"] = args.n_chunks
     if args.no_offload:
         overrides["offload"] = False
+    if args.msp:
+        overrides["msp"] = True
+        overrides["msp_split"] = args.msp_split
+        log.warning("msp: ramp sub-chunks recompute their full chunk on the "
+                    "SPMD runner — schedule validation mode, expect extra "
+                    "compute per step (DESIGN.md §2)")
     cell = resolve_cell(mdef, shape, data_size=data_size,
                         model_size=model_size, overrides=overrides or None)
+    if args.msp and cell.plan.pp == 1:
+        ap.error("--msp needs a pipeline (resolved plan has pp=1); "
+                 "pass --pp > 1 or a mesh/shape that maps to pp > 1")
     log.info("plan: %s  chunks=%s alphas=%s", cell.plan, cell.sched.lengths,
              [round(a, 3) for a in cell.alphas])
 

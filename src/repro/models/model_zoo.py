@@ -12,10 +12,9 @@ PartitionSpecs.
 """
 from __future__ import annotations
 
-import dataclasses
 import math
+import zlib
 from dataclasses import dataclass
-from typing import Any, Callable, Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -32,7 +31,10 @@ from repro.parallel.ctx import Ctx
 def _key(rng, *tags):
     k = rng
     for t in tags:
-        k = jax.random.fold_in(k, hash(t) % (2**31))
+        # stable across processes — python's str hash is salted per run,
+        # which made parameter init (and hence training losses) differ
+        # between otherwise-identical CLI invocations
+        k = jax.random.fold_in(k, zlib.crc32(str(t).encode()) % (2**31))
     return k
 
 

@@ -39,7 +39,6 @@ def moe_block(x_loc, p, cfg, ctx: Ctx, *, name_tag=None) -> Tuple[jax.Array, jax
     sp = ctx.sp
     E, E_loc = moe_dims(cfg, sp)
     K = moe.top_k
-    ff = moe.d_ff_expert
     n_tok = B * Tl
     xt = x_loc.reshape(n_tok, d)
 

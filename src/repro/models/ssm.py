@@ -26,7 +26,6 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.models import layers as L
 from repro.parallel.ctx import Ctx
 
 

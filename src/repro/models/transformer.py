@@ -13,8 +13,7 @@ slot scan with SPPO's two-level checkpoint policy around each slot.
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Callable, NamedTuple, Optional
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp

@@ -12,8 +12,7 @@ the big-model plans (DESIGN.md §4):
 """
 from __future__ import annotations
 
-import functools
-from typing import NamedTuple, Optional
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp

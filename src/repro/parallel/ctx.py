@@ -14,7 +14,7 @@ Axis roles (see DESIGN.md §4):
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Optional, Sequence, Tuple
 
 import jax
@@ -107,7 +107,6 @@ class Ctx:
     # ----- data/pod-axis collectives ---------------------------------------
     def _dp_groups(self):
         """axis_index_groups for dp subgroups of the data axis (same stage)."""
-        n = self.dp * self.pp
         return [[g * self.pp + s for g in range(self.dp)] for s in range(self.pp)]
 
     def psum_grads(self, x):

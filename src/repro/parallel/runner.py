@@ -19,19 +19,19 @@ ratios.
 """
 from __future__ import annotations
 
-import dataclasses
-import functools
 from dataclasses import dataclass
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ModelConfig, ParallelPlan, ShapeConfig
 from repro.core import costmodel as cm
 from repro.core import offload as ofl
 from repro.core import partition as part
+from repro.core import schedule as sched_mod
+from repro.core import simulate as sim_mod
 from repro.models.model_zoo import ModelDef, build_model
 from repro.models.transformer import ChunkMeta
 from repro.parallel import specs as SP
@@ -114,6 +114,19 @@ def resolve_cell(arch, shape_cfg: ShapeConfig, *, data_size=16, model_size=16,
         policy = plan.partition if plan.pp == 1 else "length"
         if plan.pp > 1:
             assert shape_cfg.seq_len % (n * model_size) == 0
+            if plan.msp:
+                # ramp sub-chunk loss regions must tile the chunk evenly
+                assert (shape_cfg.seq_len // n) % plan.msp_split == 0, (
+                    f"chunk len {shape_cfg.seq_len // n} not divisible by "
+                    f"msp_split {plan.msp_split}")
+                # sub-events recompute their full chunk; that is idempotent
+                # for the position-tagged KV cache but NOT for SSM/RWKV
+                # recurrent state, which would be advanced `split` times
+                # (DESIGN.md §2) — reject stateful-recurrence families
+                assert not cfg.sub_quadratic, (
+                    f"msp unsupported for family {cfg.family!r}: recurrent "
+                    "state updates are not idempotent under full-chunk "
+                    "recompute")
             sched = part.partition_length(shape_cfg.seq_len, n)
         else:
             sched = part.partition(shape_cfg.seq_len, n, cfg, policy,
@@ -124,7 +137,10 @@ def resolve_cell(arch, shape_cfg: ShapeConfig, *, data_size=16, model_size=16,
         costs = part.chunk_costs(sched, r)
         scale = (6 * n_params * shape_cfg.global_batch * shape_cfg.seq_len
                  / sum(costs) / (plan.sp * plan.pp * hw.peak_flops_bf16))
-        times = [c * scale for c in costs]
+        # the §5.2 hiding window is the next chunk's *forward* compute —
+        # the same fwd/bwd split the solver plans with (cm.BWD_RATIO); the
+        # two sides still differ in launch-overhead and grad-accum terms
+        times = [c * scale / (1.0 + cm.BWD_RATIO) for c in costs]
         b_loc = max(1, shape_cfg.global_batch // (pods * plan.dp))
         acts = [34 * (b_loc / max(plan.grad_accum, 1)) * l * cfg.d_model * 2
                 * (cfg.n_layers / plan.pp) / plan.sp for l in sched.lengths]
@@ -144,6 +160,32 @@ def resolve_cell(arch, shape_cfg: ShapeConfig, *, data_size=16, model_size=16,
 def _squeeze_lead(tree, n: int):
     return jax.tree_util.tree_map(
         lambda a: a.reshape(a.shape[n:]), tree)
+
+
+def pipeline_feed_events(plan: ParallelPlan, n_chunks: int):
+    """The (chunk, sub, n_sub) feed sequence the pp>1 tick loop executes.
+
+    This is the runner's side of the runner-vs-simulator contract: the
+    event-driven simulator (core/simulate.py) plays out exactly this
+    sequence, and tests assert the two agree (DESIGN.md §2/§3)."""
+    if plan.msp and plan.pp > 1:
+        return sched_mod.msp_ramp_schedule(n_chunks, plan.pp, plan.msp_split)
+    return sim_mod.plain_events(n_chunks)
+
+
+def pipeline_tick_trace(cell: Cell):
+    """Static per-tick trace of the pp>1 loop: one dict per tick with the
+    feed event entering stage 0 and the drain event leaving stage pp−1."""
+    plan = cell.plan
+    events = pipeline_feed_events(plan, cell.sched.n)
+    n_ticks = len(events) + plan.pp - 1
+    trace = []
+    for t in range(n_ticks):
+        feed = events[t] if t < len(events) else None
+        e_last = t - (plan.pp - 1)
+        drain = events[e_last] if 0 <= e_last < len(events) else None
+        trace.append(dict(tick=t, feed=feed, drain=drain))
+    return trace
 
 
 def run_pipeline(cell: Cell, ctx: Ctx, stage_p, g, tokens, labels, context,
@@ -199,34 +241,56 @@ def run_pipeline(cell: Cell, ctx: Ctx, stage_p, g, tokens, labels, context,
                     last_x=x_last)
 
     # ---- pp > 1: lock-step tick pipeline -----------------------------------
+    # The tick loop executes the feed-event schedule (plain, or the MSP ramp
+    # when plan.msp): at tick t, stage s handles event t−s.  An MSP sub-event
+    # recomputes its *full* chunk (lock-step SPMD needs uniform shapes —
+    # DESIGN.md §2); the KV-cache rewrite is idempotent (same tokens, same
+    # positions, same weights) and the loss mask restricts each sub-event to
+    # its own sub-chunk region, so every token is counted exactly once and
+    # the loss equals the plain schedule's bit-for-bit function of params.
     clen = S // N
     lloc = clen // sp
+    events = pipeline_feed_events(plan, N)
+    E = len(events)
+    chunk_arr = jnp.array([ev[0] for ev in events], jnp.int32)
+    inv_ns = jnp.array([1.0 / ev[2] for ev in events], jnp.float32)
     carry = jnp.zeros((B, lloc, d), cell.dtype)
     x_out = carry
-    for t in range(N + pp - 1):
-        if t < N:
-            ids = jax.lax.slice_in_dim(tokens, t * clen, (t + 1) * clen, axis=1)
-            x0 = mdef.embed(g, ids, chunk_positions(t * clen, lloc), ctx)
+    for t in range(E + pp - 1):
+        e_new = min(t, E - 1)
+        if t < E:
+            off_new = events[t][0] * clen
+            ids = jax.lax.slice_in_dim(tokens, off_new, off_new + clen,
+                                       axis=1)
+            x0 = mdef.embed(g, ids, chunk_positions(off_new, lloc), ctx)
         else:
             x0 = jnp.zeros((B, lloc, d), cell.dtype)
         h = jnp.where(stage == 0, x0, carry)
-        c_my = jnp.clip(t - stage, 0, N - 1)
+        e_my = jnp.clip(t - stage, 0, E - 1)
+        c_my = chunk_arr[e_my]
         off_my = c_my * clen
         q_pos = chunk_positions(off_my, lloc)
         meta = ChunkMeta(q_pos=q_pos, cache_off=c_my * lloc,
-                         kv_view=min(t + 1, N) * lloc,
-                         tag=ofl.make_tag(cell.alphas[min(t, N - 1)]))
+                         kv_view=min(events[e_new][0] + 1, N) * lloc,
+                         tag=ofl.make_tag(cell.alphas[events[e_new][0]]))
         x_out, state, aux = mdef.stage_apply(
             stage_p, state, h, ctx, meta, g,
             offload=plan.offload, remat=plan.remat)
-        valid = (t - stage >= 0) & (t - stage < N)
-        aux_acc = aux_acc + jnp.where(valid, aux, 0.0)
-        c_last = t - (pp - 1)
-        if with_loss and 0 <= c_last < N:
-            lab = jax.lax.slice_in_dim(labels, c_last * clen,
-                                       (c_last + 1) * clen, axis=1)
-            ls, cnt = mdef.head_loss(g, x_out, lab,
-                                     jnp.ones_like(lab, jnp.float32), ctx)
+        valid = (t - stage >= 0) & (t - stage < E)
+        # sub-events of one chunk run identical compute; scale aux (MoE
+        # balance) by 1/n_sub so each chunk contributes once in total
+        aux_acc = aux_acc + jnp.where(valid, aux * inv_ns[e_my], 0.0)
+        e_last = t - (pp - 1)
+        if with_loss and 0 <= e_last < E:
+            c_l, sub_l, ns_l = events[e_last]
+            lab = jax.lax.slice_in_dim(labels, c_l * clen,
+                                       (c_l + 1) * clen, axis=1)
+            sublen = clen // ns_l
+            pos_in = jnp.arange(clen)
+            mask = ((pos_in >= sub_l * sublen)
+                    & (pos_in < (sub_l + 1) * sublen)).astype(jnp.float32)
+            wts = jnp.broadcast_to(mask[None, :], lab.shape)
+            ls, cnt = mdef.head_loss(g, x_out, lab, wts, ctx)
             is_last = (stage == pp - 1).astype(jnp.float32)
             loss_acc = loss_acc + is_last * ls
             den_acc = den_acc + is_last * cnt
@@ -379,7 +443,6 @@ def make_prefill_step(cell: Cell, mesh):
         state = jax.tree_util.tree_map(lambda a: a[None], out["state"])
         return state, out["last_x"][None]
 
-    d = cell.cfg.d_model
     last_spec = P("data", None, None, None)
     smapped = shard_map(
         smap_body, mesh,

@@ -17,7 +17,6 @@ import collections
 import logging
 import signal
 import statistics
-import time
 from dataclasses import dataclass, field
 from typing import Callable, Optional
 

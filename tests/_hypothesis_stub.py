@@ -1,0 +1,67 @@
+"""Deterministic fallback for `hypothesis` (used when the real package is
+absent — e.g. a minimal container).  CI installs real hypothesis via the
+pyproject `[test]` extra; this stub keeps the tier-1 suite collectable and
+meaningful everywhere else by sampling each strategy pseudo-randomly from a
+fixed seed (plus the interval endpoints for integer/float ranges).
+
+Only the API surface the test-suite uses is implemented: `given`,
+`settings`, and the `integers` / `floats` / `sampled_from` strategies.
+"""
+from __future__ import annotations
+
+import random
+
+MAX_EXAMPLES_CAP = 25  # keep the fallback suite fast; CI runs the real thing
+
+
+class _Strategy:
+    def __init__(self, sample, endpoints=()):
+        self._sample = sample
+        self.endpoints = tuple(endpoints)
+
+    def sample(self, rng):
+        return self._sample(rng)
+
+
+def integers(lo, hi):
+    return _Strategy(lambda rng: rng.randint(lo, hi), (lo, hi))
+
+
+def floats(lo, hi, **_kw):
+    return _Strategy(lambda rng: rng.uniform(lo, hi), (lo, hi))
+
+
+def sampled_from(seq):
+    seq = list(seq)
+    return _Strategy(lambda rng: rng.choice(seq), (seq[0], seq[-1]))
+
+
+def settings(max_examples=None, deadline=None, **_kw):
+    def deco(fn):
+        fn._stub_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(*strategies):
+    def deco(fn):
+        n = min(getattr(fn, "_stub_max_examples", None) or MAX_EXAMPLES_CAP,
+                MAX_EXAMPLES_CAP)
+
+        def runner():
+            rng = random.Random(0x5BB0)
+            # endpoint cases first (all-lo, all-hi), then random samples
+            cases = [[s.endpoints[0] for s in strategies],
+                     [s.endpoints[-1] for s in strategies]]
+            cases += [[s.sample(rng) for s in strategies]
+                      for _ in range(max(0, n - 2))]
+            for args in cases:
+                fn(*args)
+
+        # NOT functools.wraps: pytest must see a zero-arg signature, or it
+        # would treat the wrapped function's parameters as fixtures
+        runner.__name__ = fn.__name__
+        runner.__doc__ = fn.__doc__
+        runner.__module__ = fn.__module__
+        return runner
+    return deco

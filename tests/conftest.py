@@ -3,11 +3,25 @@ its own 512-device flag in its own process); distributed tests spawn their
 fake-device meshes via XLA_FLAGS in subprocess or use the 8-device session
 started by tests that need it."""
 import os
+import sys
 
 # distributed integration tests need a handful of fake devices; smoke tests
 # and benches are written against whatever the session provides, so a small
 # fixed count keeps both worlds working in one pytest process.
 os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+# property tests prefer real hypothesis (the CI `[test]` extra installs it);
+# fall back to the deterministic stub so the suite stays collectable in
+# minimal containers.
+try:
+    import hypothesis  # noqa: F401
+except ImportError:  # pragma: no cover - depends on environment
+    sys.path.insert(0, os.path.dirname(__file__))
+    import _hypothesis_stub
+
+    sys.modules["hypothesis"] = _hypothesis_stub
+    sys.modules["hypothesis.strategies"] = _hypothesis_stub
+    _hypothesis_stub.strategies = _hypothesis_stub
 
 import jax  # noqa: E402
 

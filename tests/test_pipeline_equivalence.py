@@ -10,6 +10,7 @@ import pytest
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ShapeConfig, get_config
+from repro.launch.mesh import compat_make_mesh
 from repro.models.model_zoo import build_model
 from repro.parallel.ctx import SINGLE
 from repro.parallel.runner import (_in_specs_for_params, batch_struct,
@@ -37,8 +38,7 @@ def _single_loss(mdef, cfg, tokens, labels, context):
 def _dist_loss(mdef, cfg, tokens, labels, context, *, pp, mesh_shape=(4, 2),
                extra_overrides=None):
     data_size, model_size = mesh_shape
-    mesh = jax.make_mesh(mesh_shape, ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = compat_make_mesh(mesh_shape, ("data", "model"))
     dp = data_size // pp
     B, S = tokens.shape
     shape = ShapeConfig("t", S, B, "train")
@@ -111,6 +111,38 @@ def test_optimized_attention_modes_match(eight_devices):
                      extra_overrides=dict(attn_mode="auto",
                                           grad_compress=True))
     np.testing.assert_allclose(got, ref, rtol=3e-4, atol=3e-4)
+
+
+def test_msp_rejects_stateful_recurrence_archs():
+    """MSP's full-chunk recompute is idempotent for the position-tagged KV
+    cache but would advance SSM/RWKV recurrent state `split` times —
+    resolve_cell must refuse (DESIGN.md §2)."""
+    cfg = get_config("rwkv6-3b").reduced()
+    mdef = build_model(cfg)
+    with pytest.raises(AssertionError, match="msp unsupported"):
+        resolve_cell(mdef, ShapeConfig("t", 256, 4, "train"), data_size=4,
+                     model_size=2,
+                     overrides=dict(pp=2, dp=2, n_chunks=4, msp=True,
+                                    grad_accum=1, partition="length"))
+
+
+def test_msp_pipeline_equals_single(eight_devices):
+    """Executable MSP (§6.2 ramp schedule in the SPMD tick loop) computes
+    the same loss as the single-device reference: the ramp sub-events'
+    full-chunk recompute is idempotent and the loss masks tile the chunk."""
+    cfg = get_config("qwen2-7b").reduced()
+    mdef = build_model(cfg)
+    B, S = 4, 256
+    key = jax.random.PRNGKey(7)
+    tokens = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    labels = jnp.roll(tokens, -1, axis=1)
+    ref = _single_loss(mdef, cfg, tokens, labels, None)
+    got2 = _dist_loss(mdef, cfg, tokens, labels, None, pp=2,
+                      extra_overrides=dict(msp=True))
+    np.testing.assert_allclose(got2, ref, rtol=3e-4, atol=3e-4)
+    got4 = _dist_loss(mdef, cfg, tokens, labels, None, pp=4,
+                      extra_overrides=dict(msp=True, n_chunks=4))
+    np.testing.assert_allclose(got4, ref, rtol=3e-4, atol=3e-4)
 
 
 @pytest.mark.parametrize("arch,pp", CASES)

@@ -1,0 +1,201 @@
+"""Property + contract tests for the event-driven pipeline simulator
+(core/simulate.py, DESIGN.md §3) and its wiring into the solver and the
+SPMD runner: closed-form agreement when transfers are free, MSP fill-bubble
+scaling, the §5.2 memory recurrence, unhidden-D2H stall charging, and the
+runner-vs-simulator feed-event contract."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import get_config
+from repro.core import offload as ofl
+from repro.core import schedule as sched
+from repro.core import simulate as sim
+from repro.core import solver
+
+
+# ---------------------------------------------------------------------------
+# Closed-form agreement (free transfers)
+# ---------------------------------------------------------------------------
+
+
+@given(st.integers(1, 8), st.integers(1, 64), st.floats(0.1, 10.0))
+@settings(max_examples=60, deadline=None)
+def test_plain_uniform_matches_closed_form(pp, n, per):
+    """With equal chunks and free transfers the playout IS the paper's
+    T = (p−1+N)/N · F(N)."""
+    if n < pp:
+        return
+    costs = [per] * n
+    r = sim.simulate_schedule(costs, pp=pp)
+    assert r.total == pytest.approx(sched.total_time(pp, n, sum(costs)))
+    assert r.feed_events == tuple(sim.plain_events(n))
+    # work is conserved: every stage computes every chunk once
+    assert all(b == pytest.approx(sum(costs)) for b in r.stage_busy)
+
+
+def test_pp1_arbitrary_costs_are_just_the_work():
+    costs = [0.3, 1.7, 2.0, 0.5]
+    r = sim.simulate_schedule(costs, pp=1)
+    assert r.total == pytest.approx(sum(costs))
+    assert r.bubble_ratio == pytest.approx(0.0)
+
+
+def test_imbalanced_chunks_diverge_from_closed_form_average():
+    """The closed form charges the *average* chunk for the bubble; the
+    playout sees the actual fill/drain chunks — this is why the solver
+    simulates instead of using T = (p−1+N)/N · F(N)."""
+    costs = [0.1, 0.1, 4.0, 4.0]  # cheap fill, expensive tail
+    r = sim.simulate_schedule(costs, pp=2)
+    cf = sched.total_time(2, 4, sum(costs))
+    assert abs(r.total - cf) > 0.1 * cf
+    # the fill bubble is the actual first chunk's forward, not the average
+    assert r.fill_bubble[1] == pytest.approx(0.1 / 3.0)
+
+
+# ---------------------------------------------------------------------------
+# MSP ramp schedule
+# ---------------------------------------------------------------------------
+
+
+@given(st.integers(2, 8), st.integers(2, 5), st.floats(0.2, 5.0))
+@settings(max_examples=40, deadline=None)
+def test_msp_fill_and_drain_bubble_shrink_by_split(pp, split, per):
+    """The ramp schedule's fill bubble (idle before a stage's first chunk)
+    shrinks by exactly 1/split, and total time never regresses.  Note the
+    event-driven playout shows the *total* win is smaller than the closed
+    form's (p−1)·F/(split·N) claim — steady chunks resynchronize the stages
+    (DESIGN.md §3.3) — which is exactly why the solver simulates."""
+    n = 4 * pp
+    costs = [per] * n
+    plain = sim.simulate_schedule(costs, pp=pp)
+    msp = sim.simulate_schedule(costs, pp=pp, msp=True, split=split)
+    for s in range(1, pp):
+        assert (plain.fill_bubble[s] / msp.fill_bubble[s]
+                == pytest.approx(split))
+    assert msp.total <= plain.total * (1 + 1e-9)
+    assert msp.feed_events == tuple(sched.msp_ramp_schedule(n, pp, split))
+    # work conserved under splitting
+    assert sum(msp.stage_busy) == pytest.approx(sum(plain.stage_busy))
+
+
+# ---------------------------------------------------------------------------
+# §5.2 memory recurrence + offload lanes
+# ---------------------------------------------------------------------------
+
+
+@given(st.integers(2, 20), st.floats(0.5, 50.0), st.floats(0.5, 2.0))
+@settings(max_examples=60, deadline=None)
+def test_sim_peak_matches_offload_recurrence(n, bw, tscale):
+    """Simulated forward peak == offload.peak_memory when the alphas come
+    from the sequence-aware solver (transfers hide by construction)."""
+    acts = [(n - i) * 1.0 for i in range(n)]
+    times = [tscale] * n
+    fwd = [t / 3.0 for t in times]
+    plan = ofl.sequence_aware_alphas(acts, fwd, bw)
+    r = sim.simulate_schedule(times, pp=1, chunk_acts=acts,
+                              alphas=plan.alphas, d2h_bw=bw)
+    assert r.peak_units[0] == pytest.approx(
+        ofl.peak_memory(acts, plan.alphas))
+    # memory-mirror prefetch keeps the backward peak bounded by the forward
+    assert max(r.peak_units_full) <= max(r.peak_units) * (1 + 1e-9)
+
+
+def test_unhidden_d2h_stall_is_charged():
+    """Fixed-full offload over a slow link stalls the compute lane; the
+    sequence-aware alphas for the same link do not."""
+    acts = [5.0, 4.0, 3.0, 2.0]
+    times = [1.0] * 4
+    slow = 0.5
+    full = sim.simulate_schedule(times, pp=1, chunk_acts=acts,
+                                 alphas=[1.0, 1.0, 1.0, 0.0], d2h_bw=slow)
+    free = sim.simulate_schedule(times, pp=1)
+    assert full.d2h_stall > 0.0
+    assert full.total > free.total
+    plan = ofl.sequence_aware_alphas(acts, [t / 3 for t in times], slow)
+    adaptive = sim.simulate_schedule(times, pp=1, chunk_acts=acts,
+                                     alphas=plan.alphas, d2h_bw=slow)
+    assert adaptive.d2h_stall == pytest.approx(0.0)
+    assert adaptive.total == pytest.approx(free.total)
+
+
+def test_p2p_lane_delays_downstream_stages():
+    costs = [1.0] * 4
+    free = sim.simulate_schedule(costs, pp=2)
+    slow = sim.simulate_schedule(costs, pp=2, p2p_bytes=[8.0] * 4,
+                                 ici_bw=16.0)  # 0.5 s per hand-off
+    assert slow.total > free.total
+    assert slow.fill_bubble[1] == pytest.approx(free.fill_bubble[1] + 0.5)
+
+
+# ---------------------------------------------------------------------------
+# Solver contract: candidates are scored by the simulator, never the
+# closed forms
+# ---------------------------------------------------------------------------
+
+
+def test_solver_path_never_calls_closed_forms(monkeypatch):
+    def boom(*a, **k):  # pragma: no cover - failure path
+        raise AssertionError("closed-form total_time on the solve path")
+
+    monkeypatch.setattr(sched, "total_time", boom)
+    monkeypatch.setattr(sched, "msp_total_time", boom)
+    cfg = get_config("sppo-gpt-7b")
+    res = solver.solve(cfg, seq_len=262144, batch=1,
+                       n_params=6_700_000_000)
+    assert res.n_chunks >= 1
+    res_msp = solver.solve(cfg, seq_len=262144, batch=1,
+                           n_params=6_700_000_000, msp=True)
+    assert res_msp.n_chunks >= 1
+
+
+def test_solver_msp_never_worse():
+    cfg = get_config("sppo-gpt-7b")
+    base = solver.solve(cfg, 524288, 1, 6_700_000_000)
+    msp = solver.solve(cfg, 524288, 1, 6_700_000_000, msp=True)
+    assert msp.est_time <= base.est_time * (1 + 1e-9)
+
+
+# ---------------------------------------------------------------------------
+# Runner contract: the SPMD tick loop executes the simulator's feed events
+# ---------------------------------------------------------------------------
+
+
+def test_runner_tick_trace_matches_simulator_feed_events():
+    from repro.configs.base import ShapeConfig
+    from repro.models.model_zoo import build_model
+    from repro.parallel import runner
+
+    cfg = get_config("qwen2-7b").reduced()
+    mdef = build_model(cfg)
+    cell = runner.resolve_cell(
+        mdef, ShapeConfig("t", 256, 4, "train"), data_size=4, model_size=2,
+        overrides=dict(pp=2, dp=2, n_chunks=4, msp=True, grad_accum=1,
+                       partition="length"))
+    events = runner.pipeline_feed_events(cell.plan, cell.sched.n)
+    res = sim.simulate_schedule([1.0] * cell.sched.n, pp=cell.plan.pp,
+                                msp=True, split=cell.plan.msp_split)
+    assert tuple(events) == res.feed_events
+    trace = runner.pipeline_tick_trace(cell)
+    assert len(trace) == len(events) + cell.plan.pp - 1
+    feeds = [tk["feed"] for tk in trace if tk["feed"] is not None]
+    drains = [tk["drain"] for tk in trace if tk["drain"] is not None]
+    assert feeds == list(events)
+    assert drains == list(events)  # same order, offset by pp-1 ticks
+    # every (chunk, sub) loss region drains exactly once
+    regions = {(c, s) for c, s, _ in drains}
+    split = cell.plan.msp_split
+    ramp = min(cell.plan.pp - 1, cell.sched.n // 2)
+    expect = {(c, 0) for c in range(cell.sched.n)}
+    expect |= {(c, s) for s in range(split)
+               for c in list(range(ramp))
+               + list(range(cell.sched.n - ramp, cell.sched.n))}
+    assert regions == expect
+
+    plain_cell = runner.resolve_cell(
+        mdef, ShapeConfig("t", 256, 4, "train"), data_size=4, model_size=2,
+        overrides=dict(pp=2, dp=2, n_chunks=4, grad_accum=1,
+                       partition="length"))
+    plain_ev = runner.pipeline_feed_events(plain_cell.plan,
+                                           plain_cell.sched.n)
+    assert tuple(plain_ev) == sim.simulate_schedule(
+        [1.0] * 4, pp=2).feed_events

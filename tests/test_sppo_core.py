@@ -1,14 +1,10 @@
 """Unit + hypothesis property tests for the paper's core math:
 partitioning (§3.2), sequence-aware offloading (§5.2), pipeline schedule &
 MSP (§3.3/§6), heuristic solver (§6.1)."""
-import math
-
-import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.configs.base import get_config
-from repro.core import costmodel as cm
 from repro.core import offload as ofl
 from repro.core import partition as part
 from repro.core import schedule as sched

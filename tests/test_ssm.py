@@ -3,7 +3,6 @@
 The chunked SSD (Mamba2) and chunked WKV6 (RWKV) implementations must equal
 a token-by-token recurrence, including across chunk boundaries (the SPPO
 state carry) and across sequence shards (the cross-rank composition)."""
-import dataclasses
 
 import jax
 import jax.numpy as jnp
@@ -61,7 +60,7 @@ def _mamba_ref(x, p, cfg):
 @pytest.mark.parametrize("T,nchunks", [(32, 1), (64, 2), (96, 3)])
 def test_mamba2_chunked_equals_recurrence(T, nchunks):
     cfg = get_config("zamba2-7b").reduced()
-    from repro.models.model_zoo import _mamba, _key
+    from repro.models.model_zoo import _mamba
     key = jax.random.PRNGKey(0)
     p = _mamba(key, cfg, jnp.float32)
     B = 2
