@@ -1,0 +1,127 @@
+"""Attention fwd/bwd micro-benchmark — the Pallas-kernel perf trajectory.
+
+Measures wall time of the partial-softmax attention forward and of a full
+loss+grad (dq/dk/dv) step for the three implementations:
+
+  * ``pallas``  — the fused flash kernels (interpret mode on CPU; on a real
+    TPU the same rows become native-kernel numbers),
+  * ``ref``     — the blockwise-jnp reference (the CPU training path),
+  * ``dense``   — the naive einsum oracle (materializes S×S; the ceiling
+    that flash attention exists to avoid).
+
+The ``derived`` CSV column carries the analytic FLOPs from the cost model
+(forward: 2 matmuls; backward: 5 — the recompute-based flash backward), so
+CI runs double as the measured-vs-modeled ledger (DESIGN.md §9).
+
+  PYTHONPATH=src python -m benchmarks.bench_attention [--fast] [--csv out.csv]
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+from typing import List, Tuple
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import costmodel as cm
+from repro.kernels.flash_attention import flash_attention_partial
+from repro.kernels.ref import attention_partial_ref, mha_reference, normalize
+
+# B, Tq, S, H, Hkv, hd — one chunk-vs-cache cell, one decode-ish tail cell
+SHAPES_FULL = [(1, 128, 512, 8, 2, 64), (1, 16, 512, 8, 2, 64)]
+SHAPES_FAST = [(1, 32, 128, 4, 2, 32)]
+
+
+def _time(fn, *args, reps=5):
+    fn(*args)[0].block_until_ready()          # compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.tree_util.tree_leaves(out)[0].block_until_ready()
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def _impls(q_pos, kv_pos, w):
+    def fwd_pallas(q, k, v):
+        o, m, l = flash_attention_partial(q, k, v, q_pos, kv_pos,
+                                          interpret=True)
+        return normalize(o, l), m
+
+    def fwd_ref(q, k, v):
+        o, m, l = attention_partial_ref(q, k, v, q_pos, kv_pos)
+        return normalize(o, l), m
+
+    def fwd_dense(q, k, v):
+        return mha_reference(q, k, v, q_pos, kv_pos), None
+
+    def as_grad(fwd):
+        def loss(q, k, v):
+            return jnp.sum(fwd(q, k, v)[0] * w)
+
+        def run(q, k, v):
+            l, g = jax.value_and_grad(loss, argnums=(0, 1, 2))(q, k, v)
+            return (l,) + g
+
+        return run
+
+    return [("pallas", fwd_pallas), ("ref", fwd_ref), ("dense", fwd_dense)], \
+        as_grad
+
+
+def bench_attention(measure: bool = True, fast: bool = False
+                    ) -> Tuple[List, str]:
+    rows, lines = [], ["== Attention fwd/bwd: pallas-interpret vs ref vs "
+                       "dense (CPU us; derived = analytic MXU flops) =="]
+    for (B, Tq, S, H, Hkv, hd) in (SHAPES_FAST if fast else SHAPES_FULL):
+        ks = jax.random.split(jax.random.PRNGKey(0), 4)
+        q = jax.random.normal(ks[0], (B, Tq, H, hd), jnp.float32)
+        k = jax.random.normal(ks[1], (B, S, Hkv, hd), jnp.float32)
+        v = jax.random.normal(ks[2], (B, S, Hkv, hd), jnp.float32)
+        w = jax.random.normal(ks[3], (B, Tq, H, hd), jnp.float32)
+        q_pos = jnp.arange(Tq, dtype=jnp.int32) + (S - Tq)
+        kv_pos = jnp.arange(S, dtype=jnp.int32)
+        f_fwd = cm.attn_flops(B, Tq, H, hd, causal=True, kv_len=S)
+        f_bwd = cm.attn_bwd_flops(B, Tq, H, hd, causal=True, kv_len=S)
+        by_bwd = cm.attn_bwd_bytes(B, Tq, S, H, Hkv, hd, hd, io_bytes=4)
+        tag = f"B{B}_T{Tq}_S{S}_H{H}"
+        impls, as_grad = _impls(q_pos, kv_pos, w)
+        for name, fwd in impls:
+            us_f = _time(jax.jit(fwd), q, k, v) if measure else 0
+            us_b = _time(jax.jit(as_grad(fwd)), q, k, v) if measure else 0
+            rows.append((f"attn_fwd_{name}_{tag}", round(us_f, 1), f_fwd))
+            rows.append((f"attn_bwd_{name}_{tag}", round(us_b, 1),
+                         f_fwd + f_bwd))
+            lines.append(f"{tag:18s} {name:7s} fwd {us_f:10.1f}us  "
+                         f"fwd+bwd {us_b:10.1f}us")
+        lines.append(f"{tag:18s} bwd arithmetic intensity "
+                     f"{f_bwd / by_bwd:.1f} flops/byte "
+                     f"({by_bwd / 1e6:.2f} MB HBM traffic, fp32)")
+    lines.append(f"(bwd/fwd flops ratio: matmul {cm.BWD_RATIO:.1f}, "
+                 f"recompute-flash attention {cm.ATTN_BWD_RATIO:.1f})")
+    return rows, "\n".join(lines)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="smallest shape only (CI smoke)")
+    ap.add_argument("--csv", default=None, help="also write rows to a file")
+    args = ap.parse_args()
+    rows, text = bench_attention(measure=True, fast=args.fast)
+    out = ["name,us_per_call,derived"]
+    out += [f"{n},{us},{d}" for n, us, d in rows]
+    print("\n".join(out))
+    print()
+    print(text)
+    if args.csv:
+        with open(args.csv, "w") as f:
+            f.write("\n".join(out) + "\n")
+
+
+if __name__ == "__main__":
+    main()

@@ -15,6 +15,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
 from benchmarks import figures  # noqa: E402
+from benchmarks.bench_attention import bench_attention  # noqa: E402
 
 
 def main() -> None:
@@ -34,6 +35,8 @@ def main() -> None:
         ("bench_schedule_sim",
          lambda: figures.bench_schedule_sim(measure=not args.fast)),
         ("bench_solver", figures.bench_solver),
+        ("bench_attention",
+         lambda: bench_attention(measure=not args.fast, fast=args.fast)),
     ]
     all_rows = []
     texts = []

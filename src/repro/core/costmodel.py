@@ -31,6 +31,14 @@ V5E = Hardware()
 # next chunk, so offload planning divides lumped chunk times by (1 + this)
 BWD_RATIO = 2.0
 
+# The recompute-based flash backward (kernels/flash_attention.py) runs five
+# MXU passes over each score tile — QK^T recompute, dV = P^T dO, dP = dO V^T,
+# dQ = dS K, dK = dS^T Q — against the forward's two (QK^T, PV), so the
+# attention share of a chunk's FLOPs has a bwd/fwd ratio of 5/2, not the
+# matmul convention's 4N/2N = 2.  effective_bwd_ratio blends the two by the
+# attention fraction of forward compute.
+ATTN_BWD_RATIO = 2.5
+
 # A100-80G — used to sanity-check the paper's own numbers (Figs. 10-12)
 A100 = Hardware(name="a100-80g", peak_flops_bf16=312e12, hbm_bw=2039e9,
                 ici_bw=300e9, d2h_bw=32e9, hbm_bytes=80 * 2**30)
@@ -66,6 +74,39 @@ def attn_flops(batch: int, seq: int, n_heads: int, hd: int,
     kv = kv_len if kv_len is not None else seq
     pairs = batch * seq * kv * (0.5 if causal and kv == seq else 1.0)
     return 4 * pairs * n_heads * hd
+
+
+def attn_bwd_flops(batch: int, seq: int, n_heads: int, hd: int,
+                   *, causal: bool = True, kv_len: int = None) -> float:
+    """dq/dk/dv matmul flops for one layer's attention backward
+    (recompute-based flash: 5 MXU passes over the score tiles)."""
+    return ATTN_BWD_RATIO * attn_flops(batch, seq, n_heads, hd,
+                                       causal=causal, kv_len=kv_len)
+
+
+def attn_bwd_bytes(batch: int, seq_q: int, kv_len: int, n_heads: int,
+                   n_kv_heads: int, hd_k: int, hd_v: int,
+                   *, io_bytes: int = 2) -> float:
+    """HBM traffic of the two backward grids (dq pass + dkv pass): each
+    streams q, k, v, dO and the (m, dl) row stats once and writes its own
+    gradients.  Nothing S×S is ever resident — the score/probability tiles
+    are recomputed in VMEM from the saved logsumexp statistic."""
+    q_b = batch * seq_q * n_heads * hd_k * io_bytes
+    do_b = batch * seq_q * n_heads * hd_v * 4          # dO/o are fp32
+    kv_b = batch * kv_len * n_kv_heads * (hd_k + hd_v) * io_bytes
+    stats = 2 * batch * seq_q * n_heads * 4            # m + dl rows, fp32
+    reads = 2 * (q_b + do_b + kv_b + stats)
+    # dq + dk/dv are emitted fp32 by the kernels (the caller downcasts)
+    writes = (q_b + kv_b) * 4 // io_bytes
+    return reads + writes
+
+
+def effective_bwd_ratio(attn_frac: float) -> float:
+    """Lumped bwd/fwd time ratio for a chunk whose forward FLOPs are
+    `attn_frac` attention: matmuls follow the 4N/2N = 2 convention, the
+    recompute-based attention backward costs 2.5x its forward."""
+    attn_frac = min(1.0, max(0.0, attn_frac))
+    return BWD_RATIO * (1.0 - attn_frac) + ATTN_BWD_RATIO * attn_frac
 
 
 def model_flops_per_token(n_params: int, *, train: bool) -> float:

@@ -65,14 +65,23 @@ def simulate_candidate(cfg, seq_len: int, batch: int, n_params: int,
     scale = (batch * seq_len * tok_flops) / sum(costs)
     chunk_flops = [c * scale for c in costs]
     chips = sp * pp
-    times = [f / (chips * hw.peak_flops_bf16) +
+    # backward/forward split: the recompute-based flash backward makes the
+    # attention share cost 2.5x its forward (vs 2x for matmuls); weight by
+    # the attention fraction of the relative chunk costs.  Σcosts =
+    # Σlengths + attention term, so the linear share is Σlen/Σcost.
+    attn_frac = 1.0 - sum(sched.lengths) / sum(costs)
+    bwd_ratio = cm.effective_bwd_ratio(attn_frac)
+    # the 6N lumped convention prices bwd at 2x fwd; the QK^T recompute of
+    # the attention backward adds (1+bwd_ratio)/3 on top
+    times = [f / (chips * hw.peak_flops_bf16)
+             * (1.0 + bwd_ratio) / (1.0 + cm.BWD_RATIO) +
              2 * cfg.n_layers / pp * hw.kernel_launch_us * 1e-6
              for f in chunk_flops]
     # offload: activation bytes per chunk (Type-1 ~ 34*B*s*H bf16 per layer)
     act = [34 * batch * ln * cfg.d_model * 2 * (cfg.n_layers / pp) / sp
            for ln in sched.lengths]
     # the D2H window is the *forward* compute of the next chunk (§5.2)
-    fwd_times = [t / (1.0 + cm.BWD_RATIO) for t in times]
+    fwd_times = [t / (1.0 + bwd_ratio) for t in times]
     plan = ofl.sequence_aware_alphas(act, fwd_times, hw.d2h_bw)
     alphas = plan.alphas if offload else tuple(0.0 for _ in act)
     # per-device inter-stage hand-off payload: hidden states of the chunk
@@ -82,7 +91,7 @@ def simulate_candidate(cfg, seq_len: int, batch: int, n_params: int,
         times, pp=pp, msp=msp, split=msp_split,
         chunk_acts=act, alphas=alphas,
         d2h_bw=hw.d2h_bw, p2p_bytes=p2p, ici_bw=hw.ici_bw,
-        bwd_ratio=cm.BWD_RATIO)
+        bwd_ratio=bwd_ratio)
     return res.total, alphas, res
 
 

@@ -1,4 +1,4 @@
-"""Pallas TPU kernel: chunked-causal flash attention with partial-softmax out.
+"""Pallas TPU kernels: chunked-causal flash attention, forward + backward.
 
 This is the compute hot-spot of SPPO's subsequence processing: the attention
 of one subsequence (chunk) of queries against the device-local shard of the
@@ -23,6 +23,29 @@ VMEM budget at defaults (bq=128, bk=128, hd=128, G<=8, fp32 accum):
 Outputs are the *partial* (o, m, l) triple (see kernels/ref.py) so the
 cross-device softmax merge (psum over the `model` axis) composes with the
 kernel unchanged.
+
+Backward (SPPO trains — the kernel must differentiate).  The public entry
+``flash_attention_partial`` carries a ``jax.custom_vjp``:
+
+  * residuals are (q, k, v, positions, o, m, l) — exactly the per-chunk
+    tensors the two-level activation plan (core/offload.py) already budgets:
+    q/k/v are recomputed-or-saved Type-1 rows and the (o, m, l) triple is the
+    Type-1 attention output.  Nothing quadratic is ever saved.
+  * the backward recomputes p = exp(s − m) from the saved per-row logsumexp
+    statistic m inside two fused Pallas kernels (DESIGN.md §8):
+      - dq:  the forward's grid (B·Hkv, nq, nk), KV innermost, dq accumulated
+        in VMEM scratch across KV steps;
+      - dkv: the transposed grid (B·Hkv, nk, nq), q innermost, dk/dv
+        accumulated in VMEM scratch across q steps (the GQA head fold makes
+        the sum over grouped heads implicit in the row reduction).
+  * the max statistic m is gradient-frozen (matching kernels/ref.py): its
+    contribution cancels exactly in the o/l ratio downstream, and dropping
+    its cotangent keeps the cross-device pmax merge differentiable.
+
+Because (o, l) are *un-normalized*, the quotient rule of out = o/l lives in
+jnp-land outside the kernel; the kernel backward only needs the cotangents
+(do, dl) and never the D = rowsum(do∘out) term of the fused-normalization
+formulation.
 """
 from __future__ import annotations
 
@@ -30,10 +53,12 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 NEG_INF = -1e30
+PAD_POS = 2**30
 
 
 def _flash_partial_kernel(qpos_ref, kpos_ref,     # prefetch-style position blocks
@@ -55,13 +80,7 @@ def _flash_partial_kernel(qpos_ref, kpos_ref,     # prefetch-style position bloc
     v = v_ref[...].astype(jnp.float32)          # [bk, hv]
     s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale  # [G*bq, bk]
 
-    qpos = qpos_ref[...]                        # [bq] int32
-    kpos = kpos_ref[...]                        # [bk] int32
-    qpos_g = jnp.tile(qpos, (g,))               # [G*bq] — heads share positions
-    valid = (kpos[None, :] != 2**30)
-    if causal:
-        valid = valid & (qpos_g[:, None] >= kpos[None, :])
-    s = jnp.where(valid, s, NEG_INF)
+    s = jnp.where(_visible(qpos_ref, kpos_ref, g, causal), s, NEG_INF)
 
     m_prev = mm_ref[...]                        # [G*bq, 1]
     m_blk = jnp.max(s, axis=-1, keepdims=True)
@@ -81,45 +100,149 @@ def _flash_partial_kernel(qpos_ref, kpos_ref,     # prefetch-style position bloc
         l_ref[...] = ll_ref[...].astype(l_ref.dtype)
 
 
-def flash_attention_partial(q, k, v, q_pos, kv_pos, *, causal=True,
-                            scale=None, block_q=128, block_k=128,
-                            interpret=True):
-    """Pallas partial flash attention.
+def _visible(qpos_ref, kpos_ref, g: int, causal: bool):
+    """[G*bq, bk] visibility mask — identical in forward and backward."""
+    qpos = qpos_ref[...]                        # [bq] int32
+    kpos = kpos_ref[...]                        # [bk] int32
+    qpos_g = jnp.tile(qpos, (g,))               # [G*bq] — heads share positions
+    valid = (kpos[None, :] != PAD_POS)
+    if causal:
+        valid = valid & (qpos_g[:, None] >= kpos[None, :])
+    return valid
 
-    q: [B, Tq, H, hd_k]; k: [B, S, Hkv, hd_k]; v: [B, S, Hkv, hd_v]
-    q_pos: [Tq] or [B, Tq]; kv_pos: [S]  (2**30 == padding)
-    Returns (o [B,Tq,H,hd_v] f32 un-normalized, m [B,Tq,H] f32, l [B,Tq,H] f32).
-    """
-    B, Tq, H, hdk = q.shape
-    S, Hkv = k.shape[1], k.shape[2]
-    hdv = v.shape[-1]
-    G = H // Hkv
-    if scale is None:
-        scale = 1.0 / (hdk ** 0.5)
+
+def _recompute_p_ds(qpos_ref, kpos_ref, q, k, v, do, m, dl,
+                    *, causal: bool, scale: float, g: int):
+    """Shared backward block math: recompute p from the saved logsumexp row
+    statistic, then dS = P ∘ (dO·Vᵀ + dl).  m is treated as a constant (the
+    gradient-frozen max statistic, see module docstring)."""
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale
+    s = jnp.where(_visible(qpos_ref, kpos_ref, g, causal), s, NEG_INF)
+    # fully-masked rows carry m == NEG_INF; exp(NEG_INF - NEG_INF) would be 1
+    safe = m > NEG_INF / 2                       # [G*bq, 1]
+    p = jnp.where(safe, jnp.exp(s - m), 0.0)     # [G*bq, bk]
+    dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ()))) + dl
+    return p, p * dp
+
+
+def _flash_bwd_dq_kernel(qpos_ref, kpos_ref, q_ref, k_ref, v_ref,
+                         do_ref, m_ref, dl_ref,
+                         dq_ref, dq_acc,
+                         *, causal: bool, scale: float, g: int, nk: int):
+    ks = pl.program_id(2)
+
+    @pl.when(ks == 0)
+    def _init():
+        dq_acc[...] = jnp.zeros_like(dq_acc)
+
+    q = q_ref[...].astype(jnp.float32)
+    k = k_ref[...].astype(jnp.float32)
+    v = v_ref[...].astype(jnp.float32)
+    do = do_ref[...].astype(jnp.float32)
+    _, ds = _recompute_p_ds(qpos_ref, kpos_ref, q, k, v, do,
+                            m_ref[...], dl_ref[...],
+                            causal=causal, scale=scale, g=g)
+    dq_acc[...] += jax.lax.dot_general(
+        ds, k, (((1,), (0,)), ((), ()))) * scale
+
+    @pl.when(ks == nk - 1)
+    def _fin():
+        dq_ref[...] = dq_acc[...].astype(dq_ref.dtype)
+
+
+def _flash_bwd_dkv_kernel(qpos_ref, kpos_ref, q_ref, k_ref, v_ref,
+                          do_ref, m_ref, dl_ref,
+                          dk_ref, dv_ref, dk_acc, dv_acc,
+                          *, causal: bool, scale: float, g: int, nq: int):
+    qs = pl.program_id(2)
+
+    @pl.when(qs == 0)
+    def _init():
+        dk_acc[...] = jnp.zeros_like(dk_acc)
+        dv_acc[...] = jnp.zeros_like(dv_acc)
+
+    q = q_ref[...].astype(jnp.float32)
+    k = k_ref[...].astype(jnp.float32)
+    v = v_ref[...].astype(jnp.float32)
+    do = do_ref[...].astype(jnp.float32)
+    p, ds = _recompute_p_ds(qpos_ref, kpos_ref, q, k, v, do,
+                            m_ref[...], dl_ref[...],
+                            causal=causal, scale=scale, g=g)
+    # row reductions over the G*bq folded q rows sum the GQA group for free
+    dv_acc[...] += jax.lax.dot_general(p, do, (((0,), (0,)), ((), ())))
+    dk_acc[...] += jax.lax.dot_general(
+        ds, q, (((0,), (0,)), ((), ()))) * scale
+
+    @pl.when(qs == nq - 1)
+    def _fin():
+        dk_ref[...] = dk_acc[...].astype(dk_ref.dtype)
+        dv_ref[...] = dv_acc[...].astype(dv_ref.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Geometry helpers shared by forward and backward
+# ---------------------------------------------------------------------------
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def _geometry(Tq: int, S: int, block_q: int, block_k: int):
+    bq = min(block_q, _round_up(Tq, 8))
+    bk = min(block_k, _round_up(S, 8))
+    Tqp, Sp = _round_up(Tq, bq), _round_up(S, bk)
+    return bq, bk, Tqp, Sp, Tqp // bq, Sp // bk
+
+
+def _pad_inputs(q, k, v, q_pos, kv_pos, Tqp, Sp):
+    Tq, S = q.shape[1], k.shape[1]
     if q_pos.ndim == 2:
         # kernel assumes positions shared across batch; models pass [Tq]
         q_pos = q_pos[0]
-
-    bq = min(block_q, _round_up(Tq, 8))
-    bk = min(block_k, _round_up(S, 8))
-    Tqp = _round_up(Tq, bq)
-    Sp = _round_up(S, bk)
-    nq, nk = Tqp // bq, Sp // bk
-
     if Tqp != Tq:
         q = jnp.pad(q, ((0, 0), (0, Tqp - Tq), (0, 0), (0, 0)))
         q_pos = jnp.pad(q_pos, (0, Tqp - Tq), constant_values=-1)
     if Sp != S:
         k = jnp.pad(k, ((0, 0), (0, Sp - S), (0, 0), (0, 0)))
         v = jnp.pad(v, ((0, 0), (0, Sp - S), (0, 0), (0, 0)))
-        kv_pos = jnp.pad(kv_pos, (0, Sp - S), constant_values=2**30)
+        kv_pos = jnp.pad(kv_pos, (0, Sp - S), constant_values=PAD_POS)
+    return q, k, v, q_pos, kv_pos
 
-    # fold grouped heads into q block rows: [B*Hkv, nq, G*bq, hd]
-    qg = (q.reshape(B, Tqp // bq, bq, Hkv, G, hdk)
-           .transpose(0, 3, 1, 4, 2, 5)
-           .reshape(B * Hkv, Tqp // bq, G * bq, hdk))
-    kg = k.transpose(0, 2, 1, 3).reshape(B * Hkv, Sp, hdk)
-    vg = v.transpose(0, 2, 1, 3).reshape(B * Hkv, Sp, hdv)
+
+def _fold_q_like(x, B, Hkv, G, nq, bq, last):
+    """[B, Tqp, H, last] -> [B*Hkv, nq, G*bq, last] (GQA head fold)."""
+    return (x.reshape(B, nq, bq, Hkv, G, last)
+             .transpose(0, 3, 1, 4, 2, 5)
+             .reshape(B * Hkv, nq, G * bq, last))
+
+
+def _unfold_q_like(x, B, Hkv, G, nq, bq, last, Tq):
+    x = x.reshape(B, Hkv, nq, G, bq, last).transpose(0, 2, 4, 1, 3, 5)
+    return x.reshape(B, nq * bq, Hkv * G, last)[:, :Tq]
+
+
+def _fold_kv(x, B, Hkv, Sp, last):
+    return x.transpose(0, 2, 1, 3).reshape(B * Hkv, Sp, last)
+
+
+# ---------------------------------------------------------------------------
+# Forward / backward pallas_call wrappers
+# ---------------------------------------------------------------------------
+
+
+def _fwd_impl(q, k, v, q_pos, kv_pos, causal, scale, block_q, block_k,
+              interpret):
+    B, Tq, H, hdk = q.shape
+    S, Hkv = k.shape[1], k.shape[2]
+    hdv = v.shape[-1]
+    G = H // Hkv
+    bq, bk, Tqp, Sp, nq, nk = _geometry(Tq, S, block_q, block_k)
+    q, k, v, q_pos, kv_pos = _pad_inputs(q, k, v, q_pos, kv_pos, Tqp, Sp)
+
+    qg = _fold_q_like(q, B, Hkv, G, nq, bq, hdk)
+    kg = _fold_kv(k, B, Hkv, Sp, hdk)
+    vg = _fold_kv(v, B, Hkv, Sp, hdv)
 
     grid = (B * Hkv, nq, nk)
     kern = functools.partial(_flash_partial_kernel, causal=causal,
@@ -152,16 +275,153 @@ def flash_attention_partial(q, k, v, q_pos, kv_pos, *, causal=True,
         interpret=interpret,
     )(jnp.broadcast_to(q_pos[None, :], (1, Tqp)), kv_pos, qg, kg, vg)
 
-    # unfold: [B*Hkv, nq, G*bq, hv] -> [B, Tq, H, hv]
-    def unfold(x, last):
-        x = x.reshape(B, Hkv, nq, G, bq, last).transpose(0, 2, 4, 1, 3, 5)
-        return x.reshape(B, Tqp, H, last)[:, :Tq]
-
-    o = unfold(o, hdv)
-    m = unfold(m, 1)[..., 0]
-    l = unfold(l, 1)[..., 0]
+    o = _unfold_q_like(o, B, Hkv, G, nq, bq, hdv, Tq)
+    m = _unfold_q_like(m, B, Hkv, G, nq, bq, 1, Tq)[..., 0]
+    l = _unfold_q_like(l, B, Hkv, G, nq, bq, 1, Tq)[..., 0]
     return o, m, l
 
 
-def _round_up(x: int, m: int) -> int:
-    return (x + m - 1) // m * m
+def _bwd_impl(q, k, v, q_pos, kv_pos, do, m, dl, causal, scale, block_q,
+              block_k, interpret):
+    """dq/dk/dv via the two fused backward grids; all accumulation fp32."""
+    B, Tq, H, hdk = q.shape
+    S, Hkv = k.shape[1], k.shape[2]
+    hdv = v.shape[-1]
+    G = H // Hkv
+    bq, bk, Tqp, Sp, nq, nk = _geometry(Tq, S, block_q, block_k)
+    # fully-masked rows (m == NEG_INF) have o == l == 0 identically; their
+    # cotangents are meaningless and can be inf/NaN (the 1/l² of the
+    # downstream quotient rule overflows fp32) — zero them so 0·NaN can't
+    # poison dq/dk through the p·dS products
+    live = (m > NEG_INF / 2)
+    do = jnp.where(live[..., None], do, 0.0)
+    dl = jnp.where(live, dl, 0.0)
+    q, k, v, q_pos, kv_pos = _pad_inputs(q, k, v, q_pos, kv_pos, Tqp, Sp)
+    if Tqp != Tq:
+        do = jnp.pad(do, ((0, 0), (0, Tqp - Tq), (0, 0), (0, 0)))
+        # padded rows get m = NEG_INF: the safe-row guard zeroes their p
+        m = jnp.pad(m, ((0, 0), (0, Tqp - Tq), (0, 0)),
+                    constant_values=NEG_INF)
+        dl = jnp.pad(dl, ((0, 0), (0, Tqp - Tq), (0, 0)))
+
+    qg = _fold_q_like(q, B, Hkv, G, nq, bq, hdk)
+    kg = _fold_kv(k, B, Hkv, Sp, hdk)
+    vg = _fold_kv(v, B, Hkv, Sp, hdv)
+    dog = _fold_q_like(do.astype(jnp.float32), B, Hkv, G, nq, bq, hdv)
+    mg = _fold_q_like(m[..., None], B, Hkv, G, nq, bq, 1)
+    dlg = _fold_q_like(dl.astype(jnp.float32)[..., None], B, Hkv, G, nq, bq, 1)
+    qpos_b = jnp.broadcast_to(q_pos[None, :], (1, Tqp))
+
+    # --- dq: forward's grid, KV innermost, dq accumulates in scratch
+    dq = pl.pallas_call(
+        functools.partial(_flash_bwd_dq_kernel, causal=causal, scale=scale,
+                          g=G, nk=nk),
+        grid=(B * Hkv, nq, nk),
+        in_specs=[
+            pl.BlockSpec((None, bq), lambda b, i, j: (0, i)),
+            pl.BlockSpec((bk,), lambda b, i, j: (j,)),
+            pl.BlockSpec((None, None, G * bq, hdk), lambda b, i, j: (b, i, 0, 0)),
+            pl.BlockSpec((None, bk, hdk), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((None, bk, hdv), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((None, None, G * bq, hdv), lambda b, i, j: (b, i, 0, 0)),
+            pl.BlockSpec((None, None, G * bq, 1), lambda b, i, j: (b, i, 0, 0)),
+            pl.BlockSpec((None, None, G * bq, 1), lambda b, i, j: (b, i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, None, G * bq, hdk),
+                               lambda b, i, j: (b, i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * Hkv, nq, G * bq, hdk),
+                                       jnp.float32),
+        scratch_shapes=[pltpu.VMEM((G * bq, hdk), jnp.float32)],
+        interpret=interpret,
+    )(qpos_b, kv_pos, qg, kg, vg, dog, mg, dlg)
+
+    # --- dk/dv: transposed grid, q innermost, dk/dv accumulate in scratch
+    dk, dv = pl.pallas_call(
+        functools.partial(_flash_bwd_dkv_kernel, causal=causal, scale=scale,
+                          g=G, nq=nq),
+        grid=(B * Hkv, nk, nq),
+        in_specs=[
+            pl.BlockSpec((None, bq), lambda b, j, i: (0, i)),
+            pl.BlockSpec((bk,), lambda b, j, i: (j,)),
+            pl.BlockSpec((None, None, G * bq, hdk), lambda b, j, i: (b, i, 0, 0)),
+            pl.BlockSpec((None, bk, hdk), lambda b, j, i: (b, j, 0)),
+            pl.BlockSpec((None, bk, hdv), lambda b, j, i: (b, j, 0)),
+            pl.BlockSpec((None, None, G * bq, hdv), lambda b, j, i: (b, i, 0, 0)),
+            pl.BlockSpec((None, None, G * bq, 1), lambda b, j, i: (b, i, 0, 0)),
+            pl.BlockSpec((None, None, G * bq, 1), lambda b, j, i: (b, i, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((None, None, bk, hdk), lambda b, j, i: (b, j, 0, 0)),
+            pl.BlockSpec((None, None, bk, hdv), lambda b, j, i: (b, j, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B * Hkv, nk, bk, hdk), jnp.float32),
+            jax.ShapeDtypeStruct((B * Hkv, nk, bk, hdv), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((bk, hdk), jnp.float32),
+            pltpu.VMEM((bk, hdv), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qpos_b, kv_pos, qg, kg, vg, dog, mg, dlg)
+
+    dq = _unfold_q_like(dq, B, Hkv, G, nq, bq, hdk, Tq)
+
+    def unfold_kv(x, last):
+        return x.reshape(B, Hkv, Sp, last).transpose(0, 2, 1, 3)[:, :S]
+
+    return dq, unfold_kv(dk, hdk), unfold_kv(dv, hdv)
+
+
+# ---------------------------------------------------------------------------
+# custom_vjp wiring
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6, 7, 8, 9))
+def _flash_partial(q, k, v, q_pos, kv_pos, causal, scale, block_q, block_k,
+                   interpret):
+    return _fwd_impl(q, k, v, q_pos, kv_pos, causal, scale, block_q, block_k,
+                     interpret)
+
+
+def _flash_partial_fwd(q, k, v, q_pos, kv_pos, causal, scale, block_q,
+                       block_k, interpret):
+    o, m, l = _fwd_impl(q, k, v, q_pos, kv_pos, causal, scale, block_q,
+                        block_k, interpret)
+    # (q, k, v, positions, o, m, l): the Type-1 residual set the offload
+    # planner budgets.  The recompute-based kernels consume only m (o and l
+    # alias the primal outputs, so saving them costs nothing extra on
+    # device); the planner may still row-split any of them to pinned_host.
+    return (o, m, l), (q, k, v, q_pos, kv_pos, o, m, l)
+
+
+def _flash_partial_bwd(causal, scale, block_q, block_k, interpret, res, cts):
+    q, k, v, q_pos, kv_pos, _o, m, _l = res
+    do, _dm, dl = cts   # the max statistic is gradient-frozen (kernels/ref.py)
+    dq, dk, dv = _bwd_impl(q, k, v, q_pos, kv_pos, do, m, dl, causal, scale,
+                           block_q, block_k, interpret)
+
+    def zero_pos(p):    # int positions: cotangent space is float0
+        return np.zeros(np.shape(p), jax.dtypes.float0)
+
+    return (dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype),
+            zero_pos(q_pos), zero_pos(kv_pos))
+
+
+_flash_partial.defvjp(_flash_partial_fwd, _flash_partial_bwd)
+
+
+def flash_attention_partial(q, k, v, q_pos, kv_pos, *, causal=True,
+                            scale=None, block_q=128, block_k=128,
+                            interpret=True):
+    """Pallas partial flash attention (differentiable in q, k, v).
+
+    q: [B, Tq, H, hd_k]; k: [B, S, Hkv, hd_k]; v: [B, S, Hkv, hd_v]
+    q_pos: [Tq] or [B, Tq]; kv_pos: [S]  (2**30 == padding)
+    Returns (o [B,Tq,H,hd_v] f32 un-normalized, m [B,Tq,H] f32, l [B,Tq,H] f32).
+    """
+    if scale is None:
+        scale = 1.0 / (q.shape[-1] ** 0.5)
+    return _flash_partial(q, k, v, q_pos, kv_pos, bool(causal), float(scale),
+                          int(block_q), int(block_k), bool(interpret))

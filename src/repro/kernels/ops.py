@@ -7,6 +7,7 @@ interpret mode — on real TPU the Pallas path is the default.
 """
 from __future__ import annotations
 
+import contextlib
 import os
 
 import jax
@@ -27,12 +28,32 @@ def get_backend() -> str:
     return _BACKEND
 
 
+@contextlib.contextmanager
+def backend(name: str):
+    """Scoped backend switch: ``with kops.backend("pallas"): ...``.
+
+    Restores the previous global on exit (exception-safe), so tests can flip
+    jnp<->pallas without leaking state across modules.  The flag is read at
+    trace time — re-trace (fresh ``jax.jit``) inside the block to take
+    effect on jitted callables.
+    """
+    prev = _BACKEND
+    set_backend(name)
+    try:
+        yield name
+    finally:
+        set_backend(prev)
+
+
 def attention_partial(q, k, v, q_pos, kv_pos, *, causal=True, scale=None,
                       block_k=512):
     """Partial flash attention against a local KV shard (see kernels/ref.py).
 
     Dispatches to the Pallas kernel (TPU target / interpret on CPU) or the
-    blockwise-jnp path by backend flag.  Both return identical (o, m, l).
+    blockwise-jnp path by backend flag.  Both return identical (o, m, l) and
+    both differentiate in (q, k, v) — the Pallas path via the fused backward
+    kernels' custom_vjp, the jnp path via autodiff of the blockwise scan —
+    with the max statistic m gradient-frozen on both.
     """
     if _BACKEND == "pallas":
         on_tpu = jax.default_backend() == "tpu"

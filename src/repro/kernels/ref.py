@@ -88,11 +88,21 @@ def attention_partial_ref(q, k, v, q_pos, kv_pos, *, causal=True,
 
 def merge_partials(parts):
     """Merge a list of (o, m, l) partials (single-device oracle for the
-    cross-shard psum merge)."""
-    ms = jnp.stack([p[1] for p in parts])
+    cross-shard psum merge).
+
+    Gradient contract: the max statistics are frozen (as in the kernels —
+    the rescale factors exp(m_r − M) carry no gradient; their m-dependence
+    cancels exactly in the o/l ratio), so dq/dk/dv flow entirely through the
+    o_r and l_r terms.  The explicit stop_gradient makes the merge
+    differentiable even for partials whose m was *not* already detached
+    (e.g. hand-built oracle partials in tests) and mirrors the device merge,
+    where pmax has no VJP.  tests/test_kernel_grads.py finite-differences
+    this: the winning block's dq must not be frozen."""
+    ms = jax.lax.stop_gradient(jnp.stack([p[1] for p in parts]))
     m = jnp.max(ms, axis=0)
-    o = sum(p[0] * jnp.exp(p[1] - m)[:, :, :, None] for p in parts)
-    l = sum(p[2] * jnp.exp(p[1] - m) for p in parts)
+    o = sum(p[0] * jnp.exp(jax.lax.stop_gradient(p[1]) - m)[:, :, :, None]
+            for p in parts)
+    l = sum(p[2] * jnp.exp(jax.lax.stop_gradient(p[1]) - m) for p in parts)
     return o, m, l
 
 

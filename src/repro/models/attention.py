@@ -12,6 +12,15 @@ The KV cache is position-tagged: every slot carries its global token
 position (PAD = 2**30 for empty slots), so causality across subsequence
 chunks, decode steps, and bidirectional encoder attention are all the same
 kernel invocation.
+
+Differentiability: the whole merge is training-grade on both kernel
+backends.  The partial (o, l) outputs differentiate in (q, k, v) — via the
+fused Pallas backward kernels' custom_vjp or the jnp scan's autodiff — and
+every max statistic is gradient-frozen before the pmax/psum merge (pmax has
+no VJP; the m-dependence cancels exactly in the o/l ratio, see
+kernels/ref.py), so ∂loss/∂{q,k,v} flow through the exp-rescaled o and l
+psums alone.  ``REPRO_USE_PALLAS=1`` training therefore runs the identical
+code path as serve.
 """
 from __future__ import annotations
 

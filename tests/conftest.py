@@ -33,3 +33,23 @@ def eight_devices():
     if len(jax.devices()) < 8:
         pytest.skip("needs 8 fake CPU devices (XLA_FLAGS was preset)")
     return jax.devices()[:8]
+
+
+@pytest.fixture(autouse=True)
+def _no_backend_leak():
+    """Restore the global attention backend after every test, so a test (or
+    a failure mid-`kops.backend(...)` block) can't leak pallas/jnp mode into
+    unrelated modules."""
+    from repro.kernels import ops as kops
+
+    prev = kops.get_backend()
+    yield
+    kops.set_backend(prev)
+
+
+@pytest.fixture
+def kernel_backend():
+    """Scoped backend flipper: ``with kernel_backend("pallas"): ...``."""
+    from repro.kernels import ops as kops
+
+    return kops.backend
