@@ -1,0 +1,110 @@
+"""Golden schedule-trace snapshots: freeze the solver/simulator event trace
+for fixed configs and fail CI on silent schedule drift.
+
+  PYTHONPATH=src python -m benchmarks.golden_traces --check --out regen/
+  PYTHONPATH=src python -m benchmarks.golden_traces --write
+
+The traces are the event-driven simulator's full lane timeline
+(core/simulate.py) for the solver's candidate profile of two fixed SPPO
+configs — exactly what the solver scores and what the runner's feed-event
+contract executes.  Any change to the cost model, the offload-ratio
+solver, the ramp schedule, or the playout's gating rules moves these
+files; tests/test_golden_traces.py diffs them so the change must be a
+reviewed regeneration (--write), never an accident.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+from repro.configs.base import get_config
+from repro.core import solver
+
+GOLDEN_DIR = os.path.join(os.path.dirname(__file__), "..", "tests", "golden")
+
+# (name, solver.simulate_candidate kwargs) — fixed forever; add new entries
+# rather than editing these
+CONFIGS = [
+    ("gpt7b_seq512k_pp4_n8_plain",
+     dict(arch="sppo-gpt-7b", seq_len=524288, batch=1,
+          n_params=6_700_000_000, pp=4, n=8, sp=16, msp=False)),
+    ("gpt7b_seq512k_pp4_n8_msp2",
+     dict(arch="sppo-gpt-7b", seq_len=524288, batch=1,
+          n_params=6_700_000_000, pp=4, n=8, sp=16, msp=True, msp_split=2)),
+]
+
+
+def trace_lines(spec: dict) -> list:
+    """Deterministic text form of one config's simulated trace."""
+    spec = dict(spec)
+    cfg = get_config(spec.pop("arch"))
+    total, alphas, res = solver.simulate_candidate(cfg, **spec)
+    lines = [
+        "# golden schedule trace — regenerate with "
+        "`python -m benchmarks.golden_traces --write`",
+        f"total_s,{total:.9e}",
+        f"alphas,{':'.join(f'{a:.6f}' for a in alphas)}",
+        f"d2h_stall_s,{res.d2h_stall:.9e}",
+        f"h2d_stall_s,{res.h2d_stall:.9e}",
+        f"p2p_stall_s,{res.p2p_stall:.9e}",
+        f"peak_units,{':'.join(f'{p:.6e}' for p in res.peak_units)}",
+        "stage,lane,chunk,sub,n_sub,start_s,end_s",
+    ]
+    for ev in res.trace:
+        lines.append(f"{ev.stage},{ev.lane},{ev.chunk},{ev.sub},{ev.n_sub},"
+                     f"{ev.start:.9e},{ev.end:.9e}")
+    return lines
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--write", action="store_true",
+                    help="regenerate tests/golden/ in place")
+    ap.add_argument("--check", action="store_true",
+                    help="diff regenerated traces against tests/golden/")
+    ap.add_argument("--out", default=None,
+                    help="also write regenerated traces to this directory")
+    args = ap.parse_args(argv)
+
+    golden = os.path.normpath(GOLDEN_DIR)
+    os.makedirs(golden, exist_ok=True)
+    if args.out:
+        os.makedirs(args.out, exist_ok=True)
+
+    drift = []
+    for name, spec in CONFIGS:
+        lines = trace_lines(spec)
+        text = "\n".join(lines) + "\n"
+        path = os.path.join(golden, f"{name}.csv")
+        if args.out:
+            with open(os.path.join(args.out, f"{name}.csv"), "w") as f:
+                f.write(text)
+        if args.write:
+            with open(path, "w") as f:
+                f.write(text)
+            print(f"wrote {path} ({len(lines)} lines)")
+        elif args.check:
+            want = open(path).read() if os.path.exists(path) else ""
+            if text != want:
+                got_l, want_l = text.splitlines(), want.splitlines()
+                diffs = [i for i, (a, b) in enumerate(
+                    zip(got_l, want_l)) if a != b]
+                extra = abs(len(got_l) - len(want_l))
+                drift.append(f"{name}: {len(diffs)} changed lines, "
+                             f"{extra} added/removed "
+                             f"(first: {got_l[diffs[0]] if diffs else '<tail>'!r})")
+            else:
+                print(f"{name}: OK ({len(lines)} lines)")
+    if drift:
+        print("\nSCHEDULE TRACE DRIFT (if intentional, regenerate with "
+              "`python -m benchmarks.golden_traces --write`):",
+              file=sys.stderr)
+        for msg in drift:
+            print(f"  - {msg}", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,122 @@
+"""CI memory-gate: measured-vs-predicted peak activation honesty check.
+
+  PYTHONPATH=src python -m benchmarks.memgate \
+      --budgets benchmarks/budgets.json --out memledger/ [--update]
+
+For every gate in budgets.json this builds the cell (offload on, pp>1
+emulated mesh), executes one real train-grad step through
+runtime/memledger.measure, and enforces two contracts:
+
+  1. honesty gate — measured peak tagged-activation bytes may not exceed
+     the simulator's prediction (costmodel.chunk_act_bytes ->
+     simulate.spmd_tick_peak over the runner's feed events) by more than
+     ``max_ratio`` (1.10: the §5.2 recurrence must describe reality);
+  2. budget diff — the measured peak must stay within ``band`` of the
+     value recorded in budgets.json, so any intentional change to the
+     memory behavior shows up as a reviewed diff to that file
+     (regenerate with --update).
+
+The per-tick ledger CSVs land in --out and are uploaded as a CI artifact.
+"""
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import argparse
+import json
+import sys
+
+import jax.numpy as jnp
+
+from repro.configs.base import ShapeConfig, get_config
+from repro.models.model_zoo import build_model
+from repro.parallel import runner
+from repro.runtime import memledger as ml
+
+DTYPES = {"bfloat16": jnp.bfloat16, "float32": jnp.float32}
+
+
+def run_gate(gate: dict):
+    """Returns (measured_peak, predicted_peak, ledger)."""
+    import dataclasses
+
+    cfg = get_config(gate["arch"])
+    if gate.get("reduced", True):
+        cfg = cfg.reduced()
+    mdef = build_model(cfg)
+    shape = ShapeConfig(gate["name"], gate["seq"], gate["batch"], "train")
+    cell = runner.resolve_cell(
+        mdef, shape, data_size=gate["data_size"],
+        model_size=gate["model_size"],
+        overrides=dict(pp=gate["pp"], dp=gate["data_size"] // gate["pp"],
+                       n_chunks=gate["n_chunks"], grad_accum=1,
+                       partition="length", offload=True,
+                       msp=gate.get("msp", False)))
+    cell = dataclasses.replace(cell, dtype=DTYPES[gate.get("dtype",
+                                                           "bfloat16")])
+    led = ml.measure(cell, data_size=gate["data_size"],
+                     model_size=gate["model_size"])
+    return led.peak_bytes, ml.predicted_spmd_peak(cell), led
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--budgets", default="benchmarks/budgets.json")
+    ap.add_argument("--out", default="memledger")
+    ap.add_argument("--update", action="store_true",
+                    help="rewrite budgets.json with the measured numbers")
+    args = ap.parse_args(argv)
+
+    with open(args.budgets) as f:
+        budgets = json.load(f)
+    os.makedirs(args.out, exist_ok=True)
+
+    failures = []
+    for gate in budgets["gates"]:
+        name = gate["name"]
+        measured, predicted, led = run_gate(gate)
+        led.to_csv(os.path.join(args.out, f"memledger-{name}.csv"))
+        ratio = measured / max(predicted, 1)
+        exposed = led.exposed_transfer_s
+        print(f"{name:32s} measured {measured:>12d} B  "
+              f"predicted {predicted:>14.0f} B  ratio {ratio:.4f}  "
+              f"step {led.step_time_s:.3f}s  exposed "
+              f"{0.0 if exposed is None else exposed:.3f}s")
+        if not led.runtime_coverage_ok():
+            failures.append(f"{name}: runtime probes missed ticks "
+                            "(pipeline did not fully execute)")
+        if ratio > gate["max_ratio"]:
+            failures.append(
+                f"{name}: measured peak {measured} B exceeds "
+                f"{gate['max_ratio']:.2f}x the simulator's predicted "
+                f"{predicted:.0f} B (ratio {ratio:.4f}) — the §5.2 "
+                "recurrence no longer describes the executed program")
+        if args.update:
+            gate["measured_peak_bytes"] = int(measured)
+            gate["predicted_peak_bytes"] = int(predicted)
+        else:
+            want = gate.get("measured_peak_bytes")
+            band = gate.get("band", 0.02)
+            if want and abs(measured - want) > band * want:
+                failures.append(
+                    f"{name}: measured peak {measured} B deviates more "
+                    f"than {band:.0%} from the budgeted {want} B — if "
+                    "intentional, regenerate with "
+                    "`python -m benchmarks.memgate --update`")
+
+    if args.update:
+        with open(args.budgets, "w") as f:
+            json.dump(budgets, f, indent=2)
+            f.write("\n")
+        print(f"updated {args.budgets}")
+    if failures:
+        print("\nMEMORY GATE FAILED:", file=sys.stderr)
+        for msg in failures:
+            print(f"  - {msg}", file=sys.stderr)
+        return 1
+    print("memory gate OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -2,29 +2,42 @@
 mesh: dp=2 x pp=2 x sp=2, FLOPs-balanced chunks... this is the paper's
 scenario (long sequence, few devices) at CPU-debuggable scale.
 
-  PYTHONPATH=src python examples/long_context_training.py
+  PYTHONPATH=src python examples/long_context_training.py [--fast]
 
 Shows: subsequence pipeline over pp=2 stages (ppermute hand-offs),
 sequence-sharded KV cache, two-level activation management with per-chunk
-offload ratios, gradient flow through the whole thing.
+offload ratios executed through host memory (DESIGN.md §10), gradient flow
+through the whole thing.
 """
 import os
 
 os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 
+import argparse
+
 from repro.launch import train
 
 
-def main():
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="3 steps on a short sequence (smoke-test mode)")
+    ap.add_argument("--steps", type=int, default=None)
+    ap.add_argument("--seq", type=int, default=None)
+    args = ap.parse_args(argv)
+    steps = args.steps or (3 if args.fast else 20)
+    seq = args.seq or (512 if args.fast else 2048)
+
     history = train.main([
         "--arch", "glm4-9b", "--reduced",
-        "--steps", "20", "--seq", "2048", "--batch", "4",
+        "--steps", str(steps), "--seq", str(seq), "--batch", "4",
         "--mesh", "4x2", "--pp", "2", "--n-chunks", "4",
-        "--log-every", "5",
+        "--log-every", "1" if args.fast else "5",
     ])
     first, last = history[0]["loss"], history[-1]["loss"]
     print(f"\nlong-context: loss {first:.3f} -> {last:.3f} over "
           f"{len(history)} steps on a 4x2 mesh (pp=2)")
+    return history
 
 
 if __name__ == "__main__":

@@ -1,16 +1,22 @@
-"""SPPO ablation at example scale: adaptive offload vs no offload vs full
-recompute — the Fig. 11 axes, runnable on CPU.
+"""SPPO ablation at example scale: executed adaptive offload vs the XLA
+policy path vs no offload vs full recompute — the Fig. 11 axes, runnable
+on CPU.
 
-  PYTHONPATH=src python examples/offload_ablation.py
+  PYTHONPATH=src python examples/offload_ablation.py [--fast]
 
-Prints the compiled memory footprint and step time for each variant; on the
-TPU target the offloaded variant moves the tagged residuals to pinned_host
-(verified at the jaxpr level here — the CPU backend folds host into device).
+For each variant this prints the compiled memory footprint, step time and
+deployed alphas; for the executed variant it also runs the memory ledger
+(runtime/memledger.py) and reports the measured per-tick peak next to the
+simulator's §5.2 prediction — the same comparison CI's memory-gate
+enforces.  On the TPU target the offloaded variants move the tagged
+residuals to pinned_host; the CPU backend folds host into device, so the
+jaxpr markers and the ledger are the honest evidence here.
 """
 import os
 
 os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=4")
 
+import argparse
 import time
 
 import jax
@@ -20,23 +26,39 @@ from repro.configs.base import ShapeConfig, get_config
 from repro.models.model_zoo import build_model
 from repro.parallel.ctx import SINGLE
 from repro.parallel.runner import resolve_cell, run_pipeline
+from repro.runtime import memledger as ml
+
+VARIANTS = {
+    "sppo_executed": dict(offload=True, remat="sppo",
+                          offload_mode="explicit"),
+    "sppo_xla_policy": dict(offload=True, remat="sppo", offload_mode="xla"),
+    "no_offload": dict(offload=False, remat="sppo"),
+    "full_recompute": dict(offload=False, remat="full"),
+}
 
 
-def main():
-    cfg = get_config("qwen2-7b").reduced(n_layers=4)
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="smaller model/sequence for smoke runs")
+    ap.add_argument("--seq", type=int, default=None)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--layers", type=int, default=None)
+    args = ap.parse_args(argv)
+    seq = args.seq or (256 if args.fast else 1024)
+    layers = args.layers or (2 if args.fast else 4)
+    reps = 1 if args.fast else 3
+
+    cfg = get_config("qwen2-7b").reduced(n_layers=layers)
     mdef = build_model(cfg)
-    shape = ShapeConfig("abl", 1024, 4, "train")
+    shape = ShapeConfig("abl", seq, args.batch, "train")
     key = jax.random.PRNGKey(0)
     sp = mdef.init_stage_params(key, 0, 1, jnp.bfloat16)
     g = mdef.init_globals(key, jnp.bfloat16)
-    toks = jax.random.randint(key, (4, 1024), 0, cfg.vocab_size)
+    toks = jax.random.randint(key, (args.batch, seq), 0, cfg.vocab_size)
 
-    variants = {
-        "sppo_adaptive": dict(offload=True, remat="sppo"),
-        "no_offload": dict(offload=False, remat="sppo"),
-        "full_recompute": dict(offload=False, remat="full"),
-    }
-    for name, ov in variants.items():
+    results = {}
+    for name, ov in VARIANTS.items():
         cell = resolve_cell(mdef, shape, data_size=1, model_size=1,
                             overrides=dict(n_chunks=4, grad_accum=1, **ov))
 
@@ -50,12 +72,25 @@ def main():
         f = jax.jit(jax.grad(loss))
         jax.block_until_ready(f(sp, g))
         t0 = time.perf_counter()
-        for _ in range(3):
+        for _ in range(reps):
             jax.block_until_ready(f(sp, g))
-        dt = (time.perf_counter() - t0) / 3
+        dt = (time.perf_counter() - t0) / reps
+        results[name] = cell
         print(f"{name:16s} temp {ma.temp_size_in_bytes/2**20:8.1f} MiB  "
               f"step {dt*1e3:7.1f} ms  alphas "
               f"{['%.2f' % a for a in cell.alphas]}")
+
+    # measured ledger vs §5.2 prediction for the executed variant
+    cell = results["sppo_executed"]
+    led = ml.measure(cell, data_size=1, model_size=1, baseline=True)
+    predicted = ml.predicted_spmd_peak(cell)
+    exposed = led.exposed_transfer_s or 0.0
+    print(f"\nmemledger: measured peak {led.peak_bytes/2**20:.2f} MiB  "
+          f"predicted {predicted/2**20:.2f} MiB  "
+          f"ratio {led.peak_bytes/max(predicted,1):.4f}  "
+          f"host bytes {led.host_bytes/2**20:.2f} MiB  "
+          f"exposed transfer {exposed*1e3:.1f} ms")
+    return led
 
 
 if __name__ == "__main__":

@@ -176,6 +176,11 @@ class ParallelPlan:
     n_chunks: int = 1     # N subsequences (SPPO)
     partition: str = "flops"   # flops | length  (SPPO sequence partitioning)
     offload: bool = True       # adaptive activation offload to pinned_host
+    # offload execution form (DESIGN.md §10): "explicit" places act_off rows
+    # via memory-kind device_puts in the tick loop (staged-copy emulation on
+    # backends without host memory kinds); "xla" delegates placement to the
+    # remat offload policy (save_and_offload_only_these_names)
+    offload_mode: str = "explicit"
     msp: bool = False          # multiplexed sequence partitioning (ramp chunks)
     msp_split: int = 2         # sub-chunks per ramp chunk (DESIGN.md §2)
     remat: str = "sppo"        # sppo | full | none
@@ -201,6 +206,8 @@ class ParallelPlan:
             f"sp({self.sp}) must equal model axis ({model_size})")
         assert not self.msp or self.msp_split >= 2, (
             f"msp_split({self.msp_split}) must be >= 2 (sub-chunks per ramp)")
+        assert self.offload_mode in ("explicit", "xla"), (
+            f"offload_mode({self.offload_mode!r}) must be explicit|xla")
 
 
 # ---------------------------------------------------------------------------

@@ -114,6 +114,66 @@ def model_flops_per_token(n_params: int, *, train: bool) -> float:
     return (6 if train else 2) * n_params
 
 
+# ---------------------------------------------------------------------------
+# Type-1 (tagged) activation bytes — the offload planner's unit of account
+# ---------------------------------------------------------------------------
+
+# bf16 activations everywhere the tags fire
+ACT_ITEMSIZE = 2
+
+
+def tagged_bytes_per_token(cfg) -> float:
+    """Per-layer bytes/token of the *tagged* Type-1 set — exactly the
+    tensors the slot programs route through ``name_tag`` (models/*.py):
+
+      dense/vlm/audio: q, k, v, attention out, MLP hidden
+      moe:             q, k, v (or MLA q_eff/k_eff/o_v), routed expert hidden
+      ssm/hybrid:      mixer inputs/outputs (expand·d per site)
+
+    This replaces the earlier lumped 34·d estimate, which priced the *full*
+    per-layer activation set (attention probabilities included) and so
+    overstated the offloadable volume several-fold; the memledger
+    (runtime/memledger.py) measures the real tagged bytes and CI's
+    memory-gate keeps this estimate honest within its tolerance."""
+    d, H, Hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    if cfg.mla is not None:
+        m = cfg.mla
+        eff = m.kv_lora_rank + m.rope_head_dim
+        attn = H * eff + eff + H * m.v_head_dim       # q_eff, k_eff, o_v
+    else:
+        attn = H * hd + 2 * Hkv * hd + H * hd         # q, k, v, out
+    if cfg.moe is not None:
+        mlp = cfg.moe.top_k * cfg.moe.d_ff_expert
+        mlp += cfg.moe.n_shared_experts * cfg.moe.d_ff_expert
+    else:
+        mlp = cfg.d_ff
+    if cfg.family in ("ssm", "hybrid"):
+        # mamba2/rwkv tag the expanded mixer input and output
+        expand = cfg.ssm.expand if cfg.ssm is not None else 2
+        attn, mlp = expand * d, expand * d
+    return (attn + mlp) * ACT_ITEMSIZE
+
+
+def full_act_bytes_per_token(cfg) -> float:
+    """The lumped ~34·d bytes/token/layer estimate of the *entire* per-layer
+    activation set (the classic transformer accounting) — used for
+    microbatch sizing (parallel/plans.py), where transient untagged
+    tensors count too.  The offload planner budgets the tagged subset
+    (``tagged_bytes_per_token``) instead."""
+    return 34 * cfg.d_model * ACT_ITEMSIZE
+
+
+def chunk_act_bytes(cfg, lengths, *, batch: int, pp: int, sp: int,
+                    grad_accum: int = 1) -> list:
+    """Per-chunk, per-device tagged Type-1 activation bytes for one stage:
+    every tag site sees the *local* (sequence-sharded) shard, so bytes
+    divide by sp; a stage holds n_layers/pp layers; grad accumulation
+    shrinks the resident microbatch."""
+    per_tok = tagged_bytes_per_token(cfg) * (cfg.n_layers / pp) / sp
+    b = batch / max(grad_accum, 1)
+    return [per_tok * b * ln for ln in lengths]
+
+
 def chunk_time_est(flops: float, bytes_moved: float, hw: Hardware,
                    n_ops: int = 1) -> float:
     """Roofline-max execution time + kernel overheads (Fig. 7 shape)."""

@@ -23,10 +23,19 @@ simulated by ``peak_memory`` and asserted in tests.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Sequence
+from typing import Optional, Sequence
 
 import jax
 from jax.ad_checkpoint import checkpoint_name
+
+try:  # public home moves across jax versions
+    from jax.sharding import TransferToMemoryKind as _TransferToMemoryKind
+except ImportError:  # pragma: no cover - version-dependent
+    try:
+        from jax._src.sharding_impls import (
+            TransferToMemoryKind as _TransferToMemoryKind)
+    except ImportError:
+        _TransferToMemoryKind = None
 
 
 OFF_NAME = "act_off"
@@ -95,21 +104,42 @@ def fixed_full_alphas(n: int) -> tuple:
 # ---------------------------------------------------------------------------
 
 
-def sppo_policy(offload: bool = True):
+def sppo_policy(offload: bool = True,
+                names: tuple = (OFF_NAME, KEEP_NAME)):
     """Checkpoint policy: act_keep saved on device; act_off to pinned_host.
 
     offload=False degrades to save-only (the 'SPPO w/o offload' ablation)."""
+    off_name, keep_name = names
     if offload:
         return jax.checkpoint_policies.save_and_offload_only_these_names(
-            names_which_can_be_saved=[KEEP_NAME],
-            names_which_can_be_offloaded=[OFF_NAME],
+            names_which_can_be_saved=[keep_name],
+            names_which_can_be_offloaded=[off_name],
             offload_src="device",
             offload_dst="pinned_host",
         )
-    return jax.checkpoint_policies.save_only_these_names(KEEP_NAME, OFF_NAME)
+    return jax.checkpoint_policies.save_only_these_names(off_name, keep_name)
 
 
-def make_tag(alpha: float, *, axis: int = 1):
+def split_rows(rows: int, alpha: float) -> int:
+    """Rows routed off-device for a fractional α (make_tag's split point)."""
+    if alpha <= 0.0:
+        return 0
+    if alpha >= 1.0:
+        return rows
+    return max(1, min(rows - 1, int(round(rows * alpha))))
+
+
+def chunk_names(suffix: str = "") -> tuple:
+    """(off, keep) checkpoint names, optionally qualified per chunk/tick.
+
+    Qualified names (e.g. ``act_off@t3``) let the memledger attribute the
+    saved bytes of each pipeline tick exactly from the traced jaxpr
+    (runtime/memledger.py); the policies below save any qualified variant."""
+    return (OFF_NAME + suffix, KEEP_NAME + suffix)
+
+
+def make_tag(alpha: float, *, axis: int = 1,
+             names: tuple = (OFF_NAME, KEEP_NAME)):
     """Row-split tagger implementing the fractional offload ratio.
 
     Splits a tagged activation along `axis` (the token/row dim): the first
@@ -117,18 +147,18 @@ def make_tag(alpha: float, *, axis: int = 1):
     static per chunk (the chunk loop is unrolled), exactly the paper's
     per-subsequence ratio."""
     alpha = float(alpha)
+    off_name, keep_name = names
 
     def tag(t):
         if alpha <= 0.0:
-            return checkpoint_name(t, KEEP_NAME)
+            return checkpoint_name(t, keep_name)
         if alpha >= 1.0:
-            return checkpoint_name(t, OFF_NAME)
-        rows = t.shape[axis]
-        k = max(1, min(rows - 1, int(round(rows * alpha))))
+            return checkpoint_name(t, off_name)
+        k = split_rows(t.shape[axis], alpha)
         lo = jax.lax.slice_in_dim(t, 0, k, axis=axis)
-        hi = jax.lax.slice_in_dim(t, k, rows, axis=axis)
-        lo = checkpoint_name(lo, OFF_NAME)
-        hi = checkpoint_name(hi, KEEP_NAME)
+        hi = jax.lax.slice_in_dim(t, k, t.shape[axis], axis=axis)
+        lo = checkpoint_name(lo, off_name)
+        hi = checkpoint_name(hi, keep_name)
         return jax.lax.concatenate([lo, hi], dimension=axis)
 
     return tag
@@ -139,10 +169,106 @@ def null_tag(t):
     return checkpoint_name(t, KEEP_NAME)
 
 
-def checkpoint_block(fn, *, offload: bool, remat: str = "sppo"):
-    """Wrap a layer/slot body with the SPPO two-level policy."""
+# ---------------------------------------------------------------------------
+# 3. Executed offloading: explicit memory-kind placement of act_off rows
+# ---------------------------------------------------------------------------
+#
+# The policy path above delegates placement to XLA's remat offloader.  The
+# executed path makes the two-level split explicit dataflow instead: the
+# act_off rows are device_put into host memory (D2H) *in the forward*, the
+# named residual that jax.checkpoint saves is that host-resident copy, and
+# the backward's rematerialization replays only the device_put back to
+# device (H2D).  Double-buffering falls out of the dataflow: chunk i's D2H
+# depends only on chunk i's forward, so it can overlap chunk i+1's compute,
+# and the H2D is issued by the autodiff exactly at chunk i's backward.
+# DESIGN.md §10 records the contract and the CPU fallback semantics.
+
+_HOST_KIND_CACHE: dict = {}
+
+
+def host_memory_kind(backend: Optional[str] = None) -> Optional[str]:
+    """Best host memory kind the default device exposes: 'pinned_host'
+    (TPU/GPU) > 'unpinned_host' (CPU) > None (no memory-kind support —
+    the staged-copy emulation takes over)."""
+    key = backend or "default"
+    if key in _HOST_KIND_CACHE:
+        return _HOST_KIND_CACHE[key]
+    kind = None
+    if _TransferToMemoryKind is not None:
+        try:
+            dev = jax.devices(backend)[0] if backend else jax.devices()[0]
+            kinds = {m.kind for m in dev.addressable_memories()}
+            for cand in ("pinned_host", "unpinned_host"):
+                if cand in kinds:
+                    kind = cand
+                    break
+        except Exception:  # pragma: no cover - backend-dependent
+            kind = None
+    _HOST_KIND_CACHE[key] = kind
+    return kind
+
+
+def host_round_trip(t, *, host_kind: Optional[str] = "auto",
+                    name: str = OFF_NAME):
+    """Route `t` through host memory with the saved residual on the host:
+
+      D2H -> checkpoint_name(act_off) -> H2D
+
+    Under ``jax.checkpoint(policy=save_only_these_names(...))`` the named
+    host-resident copy is what gets saved; the backward's remat replays only
+    the H2D.  On backends without memory kinds the staged-copy emulation
+    keeps the identical graph structure (a named save point fenced by
+    optimization barriers, so XLA must materialize the staged buffer) —
+    on either path the round trip is a value-level identity."""
+    kind = host_memory_kind() if host_kind == "auto" else host_kind
+    if kind is None:
+        staged = checkpoint_name(jax.lax.optimization_barrier(t), name)
+        return jax.lax.optimization_barrier(staged)
+    th = jax.device_put(t, _TransferToMemoryKind(kind))           # D2H
+    th = checkpoint_name(th, name)                                # host residual
+    return jax.device_put(th, _TransferToMemoryKind("device"))    # H2D
+
+
+def make_exec_tag(alpha: float, *, axis: int = 1,
+                  names: tuple = (OFF_NAME, KEEP_NAME), host_kind="auto"):
+    """Executed form of ``make_tag``: same row split, but the act_off rows
+    round-trip through host memory so the transfers are real program
+    dataflow rather than an XLA remat hint.  The tag is a value-level
+    identity (slice + concat + copies); it can still shift XLA fusion
+    decisions, so offload on/off losses and grads are asserted to match to
+    fp32 tolerance (<= 1e-5, tests/test_offload_exec.py), not bitwise."""
+    alpha = float(alpha)
+    off_name, keep_name = names
+
+    def tag(t):
+        if alpha <= 0.0:
+            return checkpoint_name(t, keep_name)
+        if alpha >= 1.0:
+            return host_round_trip(t, host_kind=host_kind, name=off_name)
+        k = split_rows(t.shape[axis], alpha)
+        lo = jax.lax.slice_in_dim(t, 0, k, axis=axis)
+        hi = jax.lax.slice_in_dim(t, k, t.shape[axis], axis=axis)
+        lo = host_round_trip(lo, host_kind=host_kind, name=off_name)
+        hi = checkpoint_name(hi, keep_name)
+        return jax.lax.concatenate([lo, hi], dimension=axis)
+
+    return tag
+
+
+def checkpoint_block(fn, *, offload: bool, remat: str = "sppo",
+                     mode: str = "explicit",
+                     names: tuple = (OFF_NAME, KEEP_NAME)):
+    """Wrap a layer/slot body with the SPPO two-level policy.
+
+    mode='explicit' (the executed path): residual placement is explicit
+    dataflow from the exec tags, so the policy only pins the two named
+    classes as saved.  mode='xla': the original remat-offload policy —
+    placement delegated to XLA (save_and_offload_only_these_names)."""
     if remat == "full":
         return jax.checkpoint(fn)   # save nothing: full recompute baseline
     if remat == "none":
         return fn
-    return jax.checkpoint(fn, policy=sppo_policy(offload))
+    if mode == "xla":
+        return jax.checkpoint(fn, policy=sppo_policy(offload, names=names))
+    return jax.checkpoint(
+        fn, policy=jax.checkpoint_policies.save_only_these_names(*names))

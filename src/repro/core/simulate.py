@@ -275,3 +275,34 @@ def simulate_schedule(chunk_costs: Sequence[float], *, pp: int,
     n = len(chunk_costs)
     ev = msp_ramp_schedule(n, pp, split) if msp and pp > 1 else plain_events(n)
     return simulate(ev, chunk_costs, pp=pp, **kw)
+
+
+def spmd_tick_peak(events: Sequence[Tuple[int, int, int]], *, pp: int,
+                   chunk_acts: Sequence[float],
+                   alphas: Sequence[float]) -> Tuple[float, list]:
+    """Predicted §5.2 memory recurrence of the *lock-step SPMD* tick loop
+    (parallel/runner.py, pp > 1): every stage materializes one tagged set
+    per tick — including the pp−1 drain ticks, which replay the last feed
+    event's chunk (masked compute, real allocation), and MSP sub-events,
+    which rematerialize their full chunk (DESIGN.md §2).  This is the
+    apples-to-apples prediction for the memledger's measured per-tick
+    ledger; the per-stage event playout above (`simulate`) remains the
+    idealized pipeline target.  Returns (peak, per-tick resident)."""
+    events = list(events)
+    ne = len(events)
+    if ne == 0:
+        return 0.0, []
+    n_ticks = ne + max(pp, 1) - 1
+    resident = []
+    m = 0.0
+    prev_off = 0.0
+    peak = 0.0
+    for t in range(n_ticks):
+        c = events[min(t, ne - 1)][0]
+        a = chunk_acts[c]
+        m += a
+        peak = max(peak, m)
+        resident.append(m)
+        m -= prev_off
+        prev_off = alphas[c] * a
+    return peak, resident

@@ -77,9 +77,9 @@ def simulate_candidate(cfg, seq_len: int, batch: int, n_params: int,
              * (1.0 + bwd_ratio) / (1.0 + cm.BWD_RATIO) +
              2 * cfg.n_layers / pp * hw.kernel_launch_us * 1e-6
              for f in chunk_flops]
-    # offload: activation bytes per chunk (Type-1 ~ 34*B*s*H bf16 per layer)
-    act = [34 * batch * ln * cfg.d_model * 2 * (cfg.n_layers / pp) / sp
-           for ln in sched.lengths]
+    # offload: tagged Type-1 activation bytes per chunk (cost model's
+    # per-site ledger — costmodel.tagged_bytes_per_token)
+    act = cm.chunk_act_bytes(cfg, sched.lengths, batch=batch, pp=pp, sp=sp)
     # the D2H window is the *forward* compute of the next chunk (§5.2)
     fwd_times = [t / (1.0 + bwd_ratio) for t in times]
     plan = ofl.sequence_aware_alphas(act, fwd_times, hw.d2h_bw)

@@ -542,7 +542,7 @@ class ModelDef:
         return jax.tree_util.tree_map(lambda *a: jnp.stack(a), *states)
 
     def stage_apply(self, stage_params, state, x, ctx, meta, g, *,
-                    offload=True, remat="sppo"):
+                    offload=True, remat="sppo", offload_mode="explicit"):
         extras = None
         if self.cfg.shared_attn_every:
             shared_spec = {"ln1": _norm_spec(self.cfg), "ln2": _norm_spec(self.cfg),
@@ -550,7 +550,8 @@ class ModelDef:
             extras = {"shared": T.gather_params(g["shared"], shared_spec, ctx)}
         return T.stage_apply(self.cfg, self.cfg.family, stage_params,
                              self.stage_spec(), state, x, ctx, meta,
-                             extras, offload=offload, remat=remat)
+                             extras, offload=offload, remat=remat,
+                             offload_mode=offload_mode)
 
 
 def build_model(name_or_cfg) -> ModelDef:

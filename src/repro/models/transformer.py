@@ -18,6 +18,7 @@ from typing import Any, NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.core import offload as offload_mod
 from repro.core.offload import checkpoint_block
 from repro.models import attention as A
 from repro.models import layers as L
@@ -30,9 +31,12 @@ class ChunkMeta(NamedTuple):
     q_pos: Any          # [T_loc] global positions of this rank's chunk shard
     cache_off: Any      # local cache write offset (static or traced int)
     kv_view: int        # STATIC visible local cache length after append
-    tag: Any            # offload tag fn (core.offload.make_tag)
+    tag: Any            # offload tag fn (core.offload.make_tag/make_exec_tag)
     decode: bool = False
     my_slot: Any = None  # decode: striped cache write slot or -1
+    # (off, keep) checkpoint names the tag uses — per-tick qualified in the
+    # pipeline loops so the memledger can attribute saved bytes exactly
+    names: Any = (offload_mod.OFF_NAME, offload_mod.KEEP_NAME)
 
 
 ZERO = jnp.float32(0.0)
@@ -255,7 +259,8 @@ def gather_params(p_slot, shard_dims, ctx: Ctx):
 
 
 def stage_apply(cfg, family: str, stage_params, shard_dims, state, x, ctx: Ctx,
-                meta: ChunkMeta, extras=None, *, offload=True, remat="sppo"):
+                meta: ChunkMeta, extras=None, *, offload=True, remat="sppo",
+                offload_mode="explicit"):
     """Run one pipeline stage (a stack of slots) on one chunk.
 
     stage_params: pytree with leading slot dim (local shards);
@@ -271,7 +276,8 @@ def stage_apply(cfg, family: str, stage_params, shard_dims, state, x, ctx: Ctx,
             p_full = gather_params(p_l, shard_dims, ctx)
             return slot(cfg, p_full, s_l, x_l, ctx, meta, extras)
 
-        fn = checkpoint_block(inner, offload=offload, remat=remat)
+        fn = checkpoint_block(inner, offload=offload, remat=remat,
+                              mode=offload_mode, names=meta.names)
         xx, s_new, aux = fn(p_slot, s_slot, xx)
         return xx, (s_new, aux)
 

@@ -11,6 +11,7 @@ from __future__ import annotations
 import dataclasses
 
 from repro.configs.base import ModelConfig, ParallelPlan, ShapeConfig
+from repro.core import costmodel as cm
 
 ACT_BYTES_BUDGET = 3.5 * 2**30  # target tagged-activation bytes per device
 
@@ -61,10 +62,12 @@ def resolve_plan(cfg: ModelConfig, shape: ShapeConfig, *, data_size: int = 16,
     b_loc = max(1, B // (dp * pods))
     accum = 1
     if shape.kind == "train":
-        # memory-aware microbatching: tagged Type-1 activations are about
-        # 34*B*S*H bytes/layer (bf16) spread over pp*sp devices; pick the
-        # accumulation factor that fits ACT_BYTES_BUDGET
-        per_tok = 34 * cfg.d_model * 2 * cfg.n_layers / (pp * model_size)
+        # memory-aware microbatching: the full per-layer activation set
+        # (costmodel.full_act_bytes_per_token, ~34·d bf16) spread over
+        # pp*sp devices; pick the accumulation factor that fits
+        # ACT_BYTES_BUDGET
+        per_tok = (cm.full_act_bytes_per_token(cfg) * cfg.n_layers
+                   / (pp * model_size))
         tok_budget = max(2048, int(ACT_BYTES_BUDGET / per_tok))
         want = max(1, (b_loc * shape.seq_len + tok_budget - 1) // tok_budget)
         # smallest divisor of b_loc >= want (cap at b_loc: microbatch of 1)

@@ -107,6 +107,13 @@ def resolve_cell(arch, shape_cfg: ShapeConfig, *, data_size=16, model_size=16,
                         model_size=model_size, pods=pods, overrides=overrides)
     n = plan.n_chunks
     if shape_cfg.kind == "decode":
+        # decode has no backward pass: there is no reload window to hide a
+        # transfer under, so an offloaded residual could only ever be paid
+        # for, never redeemed.  resolve_plan pins offload off for decode
+        # shapes; reject overrides that try to turn it back on.
+        assert not plan.offload, (
+            "decode plans must not offload: a decode step has no backward, "
+            "so offloaded activations are never reloaded (DESIGN.md §4)")
         sched = part.ChunkSchedule((1,), (0,), 1, "decode")
         alphas = (0.0,)
     else:
@@ -142,8 +149,9 @@ def resolve_cell(arch, shape_cfg: ShapeConfig, *, data_size=16, model_size=16,
         # two sides still differ in launch-overhead and grad-accum terms
         times = [c * scale / (1.0 + cm.BWD_RATIO) for c in costs]
         b_loc = max(1, shape_cfg.global_batch // (pods * plan.dp))
-        acts = [34 * (b_loc / max(plan.grad_accum, 1)) * l * cfg.d_model * 2
-                * (cfg.n_layers / plan.pp) / plan.sp for l in sched.lengths]
+        acts = cm.chunk_act_bytes(cfg, sched.lengths, batch=b_loc,
+                                  pp=plan.pp, sp=plan.sp,
+                                  grad_accum=plan.grad_accum)
         alphas = ofl.sequence_aware_alphas(acts, times, hw.d2h_bw).alphas
         if not plan.offload:
             alphas = tuple(0.0 for _ in alphas)
@@ -160,6 +168,22 @@ def resolve_cell(arch, shape_cfg: ShapeConfig, *, data_size=16, model_size=16,
 def _squeeze_lead(tree, n: int):
     return jax.tree_util.tree_map(
         lambda a: a.reshape(a.shape[n:]), tree)
+
+
+def chunk_tag(cell: Cell, chunk: int, *, suffix: str, train: bool):
+    """(tag, names) for one tick/chunk of the pipeline loops.
+
+    Executed offloading (plan.offload_mode == 'explicit', DESIGN.md §10)
+    routes the act_off rows through host memory inside the differentiated
+    train loops; prefill has no backward — nothing is ever reloaded — so it
+    keeps the plain named tags.  The names are suffix-qualified so the
+    memledger can attribute each tick's saved bytes from the traced jaxpr."""
+    names = ofl.chunk_names(suffix)
+    alpha = cell.alphas[chunk]
+    plan = cell.plan
+    if train and plan.offload and plan.offload_mode == "explicit":
+        return ofl.make_exec_tag(alpha, names=names), names
+    return ofl.make_tag(alpha, names=names), names
 
 
 def pipeline_feed_events(plan: ParallelPlan, n_chunks: int):
@@ -189,8 +213,12 @@ def pipeline_tick_trace(cell: Cell):
 
 
 def run_pipeline(cell: Cell, ctx: Ctx, stage_p, g, tokens, labels, context,
-                 *, with_loss: bool, collect_state: bool = False):
+                 *, with_loss: bool, collect_state: bool = False,
+                 ledger=None):
     """tokens/labels: [B_loc, S] local; context: [B_loc, Nctx_loc, d] or None.
+
+    ledger: optional runtime.memledger.MemLedger — inserts per-tick probes
+    (fwd/bwd wall-clock + execution order) on the compute path.
 
     Returns dict(loss_sum, denom, aux, state, last_x)."""
     mdef, cfg, plan = cell.mdef, cell.cfg, cell.plan
@@ -224,12 +252,18 @@ def run_pipeline(cell: Cell, ctx: Ctx, stage_p, g, tokens, labels, context,
             ids = jax.lax.slice_in_dim(tokens, off, off + ln, axis=1)
             q_pos = chunk_positions(off, lloc)
             x = mdef.embed(g, ids, q_pos, ctx)
+            tag, names = chunk_tag(cell, c, suffix=f"@c{c}",
+                                   train=with_loss)
             meta = ChunkMeta(q_pos=q_pos, cache_off=off // sp,
                              kv_view=(off + ln) // sp,
-                             tag=ofl.make_tag(cell.alphas[c]))
+                             tag=tag, names=names)
             x, state, aux = mdef.stage_apply(
                 stage_p, state, x, ctx, meta, g,
-                offload=plan.offload, remat=plan.remat)
+                offload=plan.offload, remat=plan.remat,
+                offload_mode=plan.offload_mode)
+            if ledger is not None:
+                from repro.runtime import memledger as _ml
+                x = _ml.tick_probe(x, ledger, c)
             aux_acc = aux_acc + aux
             if with_loss:
                 lab = jax.lax.slice_in_dim(labels, off, off + ln, axis=1)
@@ -270,12 +304,20 @@ def run_pipeline(cell: Cell, ctx: Ctx, stage_p, g, tokens, labels, context,
         c_my = chunk_arr[e_my]
         off_my = c_my * clen
         q_pos = chunk_positions(off_my, lloc)
+        # tick-aligned offload ratio: the SPMD program is uniform across
+        # stages, so every stage tags with the fed event's deployed alpha
+        tag, names = chunk_tag(cell, events[e_new][0], suffix=f"@t{t}",
+                               train=with_loss)
         meta = ChunkMeta(q_pos=q_pos, cache_off=c_my * lloc,
                          kv_view=min(events[e_new][0] + 1, N) * lloc,
-                         tag=ofl.make_tag(cell.alphas[events[e_new][0]]))
+                         tag=tag, names=names)
         x_out, state, aux = mdef.stage_apply(
             stage_p, state, h, ctx, meta, g,
-            offload=plan.offload, remat=plan.remat)
+            offload=plan.offload, remat=plan.remat,
+            offload_mode=plan.offload_mode)
+        if ledger is not None:
+            from repro.runtime import memledger as _ml
+            x_out = _ml.tick_probe(x_out, ledger, t)
         valid = (t - stage >= 0) & (t - stage < E)
         # sub-events of one chunk run identical compute; scale aux (MoE
         # balance) by 1/n_sub so each chunk contributes once in total
@@ -344,7 +386,7 @@ def _in_specs_for_params(cell: Cell):
 # ---------------------------------------------------------------------------
 
 
-def make_train_step(cell: Cell, mesh, *, lr_kwargs=None):
+def make_train_step(cell: Cell, mesh, *, lr_kwargs=None, ledger=None):
     from repro.optim import adamw
 
     plan = cell.plan
@@ -362,7 +404,7 @@ def make_train_step(cell: Cell, mesh, *, lr_kwargs=None):
 
         def loss_fn(stage_p, g, tok, lab, ctxt):
             out = run_pipeline(cell, ctx, stage_p, g, tok, lab, ctxt,
-                               with_loss=True)
+                               with_loss=True, ledger=ledger)
             num = ctx.psum_loss_all(out["loss"])
             den = ctx.psum_loss_all(out["denom"])
             aux = ctx.psum_loss_all(out["aux"])
@@ -480,12 +522,17 @@ def make_serve_step(cell: Cell, mesh):
             kv_view=cell.cache_loc, tag=ofl.null_tag, decode=True,
             my_slot=my_slot)
 
+        # Decode consumes the plan like every other loop.  resolve_plan pins
+        # offload=False / remat="none" for decode shapes (and resolve_cell
+        # asserts it): a decode step has no backward, so there is no reload
+        # to hide and no residual worth evicting — offloading here would be
+        # pure added H2D latency on the critical path (DESIGN.md §4).
         def one_micro(state_m, tok_m):
             x = cell.mdef.embed(g, tok_m, jnp.full((1,), pos, jnp.int32),
                                 ctx, decode=True)
             x, state_m, _ = cell.mdef.stage_apply(
-                stage_p, state_m, x, ctx, meta, g, offload=False,
-                remat="none")
+                stage_p, state_m, x, ctx, meta, g, offload=plan.offload,
+                remat=plan.remat, offload_mode=plan.offload_mode)
             return state_m, x
 
         if plan.pp == 1:
@@ -515,9 +562,11 @@ def make_serve_step(cell: Cell, mesh):
                                      jnp.full((1,), pos, jnp.int32),
                                      ctx, decode=True)
                 h = jnp.where(stage == 0, x0, carry)
+                # plan-driven like one_micro above: decode never offloads
+                # (no backward, nothing to hide under — DESIGN.md §4)
                 x, state_m, _ = cell.mdef.stage_apply(
-                    stage_p, state_m, h, ctx, meta, g, offload=False,
-                    remat="none")
+                    stage_p, state_m, h, ctx, meta, g, offload=plan.offload,
+                    remat=plan.remat, offload_mode=plan.offload_mode)
                 state = jax.tree_util.tree_map(
                     lambda a, am: (jax.lax.dynamic_update_slice_in_dim(
                         a, am, boff, axis=1) if a.ndim >= 3 else am),

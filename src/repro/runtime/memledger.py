@@ -1,0 +1,403 @@
+"""Memory ledger: measured per-tick activation accounting for the executed
+offload path (DESIGN.md §10).
+
+Two measurement channels, both taken from the *real* program:
+
+1. **Tagged-byte accounting** — every pipeline tick tags its Type-1
+   activations with tick-qualified checkpoint names (``act_off@t3`` /
+   ``act_keep@t3``, runner.chunk_tag).  ``tagged_bytes_from_jaxpr`` walks
+   the traced jaxpr of the loss (through pjit / shard_map / remat / scan,
+   multiplying by scan trip counts) and sums the exact aval bytes behind
+   each name.  Shapes are static facts of the executed program, so this is
+   exact per-device accounting — not an estimate.
+
+2. **Runtime tick probes** — ``tick_probe`` is a custom_vjp identity the
+   runner threads onto the compute path; its fwd/bwd rules fire host
+   callbacks recording wall-clock per tick, so the ledger can verify that
+   every tick's forward AND backward actually executed, plus coarse
+   per-phase wall time.  The callbacks are unordered (ordered effects are
+   not supported under shard_map), so cross-tick ordering is telemetry,
+   not a contract.  On CPU the host copies are folded into device memory
+   by XLA, so *exposed transfer time* is reported as the step-time delta
+   against an offload-off run (see ``measure``) — on a TPU backend the
+   same probes bracket the real async copies.
+
+The ledger then replays the §5.2 recurrence M_t = M_{t-1} + A_t −
+α_{t-1}A_{t-1} over the measured per-tick bytes; CI's memory-gate compares
+that measured peak against the simulator's prediction from the analytic
+cost model (core/simulate.spmd_tick_peak over costmodel.chunk_act_bytes).
+"""
+from __future__ import annotations
+
+import csv
+import functools
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import offload as ofl
+
+try:  # jax >= 0.4.27
+    from jax.experimental import io_callback
+except ImportError:  # pragma: no cover - very old jax
+    io_callback = None
+
+
+# ---------------------------------------------------------------------------
+# Runtime tick probes
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2))
+def tick_probe(x, ledger, tick):
+    """Identity on the compute path; records (phase, tick, wall) per device
+    into `ledger` when the program actually executes the tick."""
+    return x
+
+
+def _probe_fwd(x, ledger, tick):
+    if io_callback is not None:
+        io_callback(lambda: ledger.record_runtime("fwd", tick), None,
+                    ordered=False)
+    return x, None
+
+
+def _probe_bwd(ledger, tick, res, g):
+    if io_callback is not None:
+        io_callback(lambda: ledger.record_runtime("bwd", tick), None,
+                    ordered=False)
+    return (g,)
+
+
+tick_probe.defvjp(_probe_fwd, _probe_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Jaxpr walk: exact tagged bytes per tick
+# ---------------------------------------------------------------------------
+
+
+def _aval_bytes(aval) -> int:
+    try:
+        size = 1
+        for s in aval.shape:
+            size *= int(s)
+        return size * aval.dtype.itemsize
+    except Exception:  # pragma: no cover - abstract tokens etc.
+        return 0
+
+
+def _walk(jaxpr, mult: int, out: Dict[str, int]) -> None:
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name == "name":
+            nm = eqn.params.get("name", "")
+            out[nm] = out.get(nm, 0) + mult * sum(
+                _aval_bytes(v.aval) for v in eqn.invars)
+            continue
+        m = mult
+        if eqn.primitive.name == "scan":
+            m = mult * int(eqn.params.get("length", 1))
+        for v in eqn.params.values():
+            for sub in _sub_jaxprs(v):
+                _walk(sub, m, out)
+
+
+def _sub_jaxprs(v):
+    core = jax.core
+    if isinstance(v, core.ClosedJaxpr):
+        yield v.jaxpr
+    elif isinstance(v, core.Jaxpr):
+        yield v
+    elif isinstance(v, (list, tuple)):
+        for item in v:
+            yield from _sub_jaxprs(item)
+
+
+def tagged_bytes_from_jaxpr(closed_jaxpr) -> Dict[str, Dict[str, int]]:
+    """{suffix: {"off": bytes, "keep": bytes}} from a traced (forward)
+    jaxpr.  Walk the *forward-only* trace — under grad the remat'd backward
+    repeats the name equations and would double-count."""
+    raw: Dict[str, int] = {}
+    _walk(closed_jaxpr.jaxpr, 1, raw)
+    per: Dict[str, Dict[str, int]] = {}
+    for nm, nbytes in raw.items():
+        for base, kind in ((ofl.OFF_NAME, "off"), (ofl.KEEP_NAME, "keep")):
+            if nm.startswith(base):
+                suffix = nm[len(base):]
+                per.setdefault(suffix, {"off": 0, "keep": 0})
+                per[suffix][kind] += nbytes
+                break
+    return per
+
+
+# ---------------------------------------------------------------------------
+# The ledger
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class TickRow:
+    tick: int
+    chunk: int            # chunk fed at this tick (last chunk on drain ticks)
+    valid: bool           # False for the SPMD drain ticks (masked compute)
+    alpha: float
+    mat_bytes: int        # tagged bytes materialized this tick (off + keep)
+    off_bytes: int        # ... of which routed to host
+    resident: int = 0     # §5.2 recurrence replay, after materialization
+    fwd_t: Optional[float] = None   # runtime probe wall-clock (first sample)
+    bwd_t: Optional[float] = None
+
+
+@dataclass
+class MemLedger:
+    """Measured per-tick ledger for one (cell, step) execution."""
+
+    alphas: Tuple[float, ...] = ()
+    ticks: List[TickRow] = field(default_factory=list)
+    runtime_events: List[Tuple[str, int, float]] = field(default_factory=list)
+    exposed_transfer_s: Optional[float] = None  # offload-on minus offload-off
+    step_time_s: Optional[float] = None
+
+    # -- runtime channel ----------------------------------------------------
+    def record_runtime(self, phase: str, tick: int) -> None:
+        self.runtime_events.append((phase, int(tick), time.perf_counter()))
+
+    # -- byte channel -------------------------------------------------------
+    def load_tagged(self, per_suffix: Dict[str, Dict[str, int]],
+                    events, pp: int, alphas) -> None:
+        """Fold jaxpr-measured per-tick bytes + the feed schedule into tick
+        rows and replay the §5.2 recurrence."""
+        self.alphas = tuple(float(a) for a in alphas)
+        n_ticks = len(events) + pp - 1
+        rows = []
+        for t in range(n_ticks):
+            e = min(t, len(events) - 1)
+            chunk = events[e][0]
+            key = f"@t{t}" if pp > 1 else f"@c{chunk}"
+            got = per_suffix.get(key, {"off": 0, "keep": 0})
+            rows.append(TickRow(
+                tick=t, chunk=chunk, valid=t < len(events),
+                alpha=self.alphas[chunk],
+                mat_bytes=got["off"] + got["keep"],
+                off_bytes=got["off"]))
+        # M_t = M_{t-1} + A_t − off_{t-1}: the previous tick's offload
+        # drains while tick t computes (§5.2, tick granularity)
+        m = 0
+        prev_off = 0
+        for r in rows:
+            m += r.mat_bytes
+            r.resident = m
+            m -= prev_off
+            prev_off = r.off_bytes
+        self.ticks = rows
+        self._fold_runtime()
+
+    def _fold_runtime(self) -> None:
+        firsts: Dict[Tuple[str, int], float] = {}
+        for phase, tick, t in self.runtime_events:
+            key = (phase, tick)
+            firsts[key] = min(firsts.get(key, t), t)
+        for r in self.ticks:
+            r.fwd_t = firsts.get(("fwd", r.tick))
+            r.bwd_t = firsts.get(("bwd", r.tick))
+
+    # -- derived ------------------------------------------------------------
+    @property
+    def peak_bytes(self) -> int:
+        return max((r.resident for r in self.ticks), default=0)
+
+    @property
+    def host_bytes(self) -> int:
+        """Total bytes placed in host memory across the forward."""
+        return sum(r.off_bytes for r in self.ticks)
+
+    def runtime_coverage_ok(self, *, require_bwd: bool = True) -> bool:
+        """Every tick produced forward (and backward) probe samples — the
+        evidence that each tick's fwd and bwd actually executed.  Exact
+        cross-tick ordering is deliberately NOT asserted: the probes are
+        unordered host callbacks and may drain late relative to the XLA
+        schedule (DESIGN.md §10)."""
+        return all(r.fwd_t is not None for r in self.ticks) and (
+            not require_bwd or all(r.bwd_t is not None for r in self.ticks))
+
+    def to_csv(self, path: str) -> None:
+        with open(path, "w", newline="") as f:
+            w = csv.writer(f)
+            w.writerow(["tick", "chunk", "valid", "alpha", "mat_bytes",
+                        "off_bytes", "resident_bytes", "fwd_t", "bwd_t"])
+            for r in self.ticks:
+                w.writerow([r.tick, r.chunk, int(r.valid),
+                            f"{r.alpha:.4f}", r.mat_bytes, r.off_bytes,
+                            r.resident,
+                            "" if r.fwd_t is None else f"{r.fwd_t:.6f}",
+                            "" if r.bwd_t is None else f"{r.bwd_t:.6f}"])
+            w.writerow([])
+            w.writerow(["peak_bytes", self.peak_bytes])
+            w.writerow(["host_bytes", self.host_bytes])
+            if self.step_time_s is not None:
+                w.writerow(["step_time_s", f"{self.step_time_s:.6f}"])
+            if self.exposed_transfer_s is not None:
+                w.writerow(["exposed_transfer_s",
+                            f"{self.exposed_transfer_s:.6f}"])
+
+
+# ---------------------------------------------------------------------------
+# Measured run driver (CPU-runnable; the memory-gate entry point)
+# ---------------------------------------------------------------------------
+
+
+def _drain_callbacks() -> None:
+    """Wait for all pending host callbacks (the unordered tick probes) —
+    jax.block_until_ready only waits on array outputs."""
+    barrier = getattr(jax, "effects_barrier", None)
+    if barrier is not None:
+        barrier()
+
+
+def build_step(cell, *, data_size: int, model_size: int, tokens=None,
+               labels=None, seed: int = 0, ledger=None,
+               with_grad: bool = True):
+    """The shared shard_map'd step scaffold over `cell`'s mesh layout:
+    params stacked stage-major, the dp-major batch layout, and the
+    pipeline loss (plus psum'd stage grads when `with_grad`), with
+    optional ledger probes on the compute path.
+
+    Returns ``(fn, (g_stage, globals, batch))``.  The measurement harness
+    (``measure``), the memory-gate, and the honesty tests all build their
+    executable here, so what the gate measures is by construction the same
+    program the tests assert on."""
+    from jax.sharding import PartitionSpec as P
+
+    from repro.launch.mesh import compat_make_mesh
+    from repro.parallel.runner import (_in_specs_for_params, batch_struct,
+                                       run_pipeline, shard_map)
+
+    plan = cell.plan
+    mdef, cfg = cell.mdef, cell.cfg
+    mesh = compat_make_mesh((data_size, model_size), ("data", "model"))
+    key = jax.random.PRNGKey(seed)
+    stages = [mdef.init_stage_params(key, s, plan.pp, cell.dtype)
+              for s in range(plan.pp)]
+    g_stage = jax.tree_util.tree_map(
+        lambda *ls: jnp.stack([ls[i % plan.pp] for i in range(data_size)]),
+        *stages)
+    gl = mdef.init_globals(key, cell.dtype)
+    if tokens is None:
+        tokens = jax.random.randint(
+            key, (cell.b_loc * plan.dp, cell.shape.seq_len), 0,
+            cfg.vocab_size)
+    if labels is None:
+        labels = jnp.roll(tokens, -1, axis=1)
+    b_loc = tokens.shape[0] // plan.dp
+
+    def lay(x):
+        return jnp.stack([x[(i // plan.pp) * b_loc:
+                            (i // plan.pp + 1) * b_loc]
+                          for i in range(data_size)])[None]
+
+    batch = {"tokens": lay(tokens), "labels": lay(labels)}
+    pspecs = _in_specs_for_params(cell)
+    _, bspecs = batch_struct(cell)
+
+    def body(stage_p, g, b):
+        ctx = cell.ctx()
+        stage_p = jax.tree_util.tree_map(
+            lambda a: a.reshape(a.shape[1:]), stage_p)
+        tok = b["tokens"].reshape(b["tokens"].shape[2:])
+        lab = b["labels"].reshape(b["labels"].shape[2:])
+
+        def loss(stage_p, g):
+            out = run_pipeline(cell, ctx, stage_p, g, tok, lab,
+                               None, with_loss=True, ledger=ledger)
+            num = ctx.psum_loss_all(out["loss"])
+            den = ctx.psum_loss_all(out["denom"])
+            return num / jnp.maximum(den, 1.0)
+
+        if with_grad:
+            l, gr = jax.value_and_grad(loss, argnums=(0, 1))(stage_p, g)
+            gs = jax.tree_util.tree_map(lambda a: a[None],
+                                        ctx.psum_grads(gr[0]))
+            return l, gs
+        return (loss(stage_p, g),
+                jax.tree_util.tree_map(lambda a: a[None], stage_p))
+
+    fn = shard_map(body, mesh,
+                   in_specs=(pspecs["stages"], pspecs["globals"], bspecs),
+                   out_specs=(P(), pspecs["stages"]))
+    return fn, (g_stage, gl, batch)
+
+
+def predicted_spmd_peak(cell) -> float:
+    """The simulator's predicted §5.2 peak for `cell`'s executed form:
+    analytic tagged bytes (costmodel.chunk_act_bytes, scaled from the
+    bf16 estimate to the cell's activation dtype) played through
+    simulate.spmd_tick_peak over the runner's feed events.  The single
+    formula behind the CI memory-gate, the honesty tests, and the
+    ablation example."""
+    from repro.core import costmodel as cm
+    from repro.core import simulate as sim
+    from repro.parallel import runner
+
+    events = runner.pipeline_feed_events(cell.plan, cell.sched.n)
+    acts = cm.chunk_act_bytes(cell.cfg, cell.sched.lengths,
+                              batch=cell.b_loc, pp=cell.plan.pp,
+                              sp=cell.plan.sp,
+                              grad_accum=cell.plan.grad_accum)
+    scale = jnp.dtype(cell.dtype).itemsize / cm.ACT_ITEMSIZE
+    peak, _ = sim.spmd_tick_peak(events, pp=cell.plan.pp,
+                                 chunk_acts=[a * scale for a in acts],
+                                 alphas=cell.alphas)
+    return peak
+
+
+def measure(cell, *, data_size: int, model_size: int, seed: int = 0,
+            baseline: bool = True) -> MemLedger:
+    """Execute one real train-grad step of `cell` on an emulated mesh with
+    the ledger attached, measure the tagged bytes from the traced jaxpr,
+    and (optionally) time an offload-off baseline for the exposed-transfer
+    estimate.  Requires grad_accum == 1 (the jaxpr scan walk would otherwise
+    multiply the per-microbatch bytes by the accumulation factor)."""
+    import dataclasses
+
+    from repro.parallel import runner
+
+    plan = cell.plan
+    assert plan.grad_accum == 1, "measure() needs grad_accum == 1"
+    ledger = MemLedger()
+    mk = dict(data_size=data_size, model_size=model_size, seed=seed)
+    fn_grad, args = build_step(cell, ledger=ledger, with_grad=True, **mk)
+    fn_fwd, _ = build_step(cell, ledger=None, with_grad=False, **mk)
+
+    # 1) exact tagged bytes from the forward-only trace (no remat dup)
+    per_suffix = tagged_bytes_from_jaxpr(jax.make_jaxpr(fn_fwd)(*args))
+
+    # 2) executed step with runtime probes
+    exe = jax.jit(fn_grad)
+    jax.block_until_ready(exe(*args))
+    _drain_callbacks()
+    ledger.runtime_events.clear()      # drop compile-run samples
+    t0 = time.perf_counter()
+    jax.block_until_ready(exe(*args))
+    ledger.step_time_s = time.perf_counter() - t0
+    _drain_callbacks()                 # probes may land after the arrays
+
+    events = runner.pipeline_feed_events(plan, cell.sched.n)
+    ledger.load_tagged(per_suffix, events, plan.pp, cell.alphas)
+
+    # 3) offload-off baseline: the exposed-transfer estimate
+    if baseline and plan.offload:
+        cell_off = dataclasses.replace(
+            cell, plan=dataclasses.replace(plan, offload=False),
+            alphas=tuple(0.0 for _ in cell.alphas))
+        fn_off, args_off = build_step(cell_off, ledger=None,
+                                      with_grad=True, **mk)
+        exe_off = jax.jit(fn_off)
+        jax.block_until_ready(exe_off(*args_off))
+        t0 = time.perf_counter()
+        jax.block_until_ready(exe_off(*args_off))
+        ledger.exposed_transfer_s = max(
+            0.0, ledger.step_time_s - (time.perf_counter() - t0))
+    return ledger

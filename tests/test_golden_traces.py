@@ -1,0 +1,26 @@
+"""Golden schedule-trace snapshots: the solver/simulator event trace for
+the two frozen configs must match tests/golden/ byte for byte.  Any change
+to the cost model, offload-ratio solver, ramp schedule, or playout gating
+moves these traces — that is allowed, but only as a reviewed regeneration
+(`python -m benchmarks.golden_traces --write`), never silently."""
+import os
+import sys
+
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+from benchmarks import golden_traces as gt  # noqa: E402
+
+
+@pytest.mark.parametrize("name,spec", gt.CONFIGS, ids=[n for n, _ in gt.CONFIGS])
+def test_trace_matches_golden(name, spec):
+    path = os.path.join(os.path.normpath(gt.GOLDEN_DIR), f"{name}.csv")
+    assert os.path.exists(path), (
+        f"missing golden trace {path}; generate with "
+        "`python -m benchmarks.golden_traces --write`")
+    got = "\n".join(gt.trace_lines(spec)) + "\n"
+    want = open(path).read()
+    assert got == want, (
+        f"schedule trace drift for {name} — if intentional, regenerate "
+        "with `python -m benchmarks.golden_traces --write` and review the "
+        "diff")
