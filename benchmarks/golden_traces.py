@@ -24,7 +24,9 @@ from repro.core import solver
 GOLDEN_DIR = os.path.join(os.path.dirname(__file__), "..", "tests", "golden")
 
 # (name, solver.simulate_candidate kwargs) — fixed forever; add new entries
-# rather than editing these
+# rather than editing these.  "reduced": True swaps in the CPU smoke config
+# and (with n_params=None) derives the parameter count from its structs;
+# offload_moments prices the §11 optimizer-state epilogue.
 CONFIGS = [
     ("gpt7b_seq512k_pp4_n8_plain",
      dict(arch="sppo-gpt-7b", seq_len=524288, batch=1,
@@ -32,6 +34,14 @@ CONFIGS = [
     ("gpt7b_seq512k_pp4_n8_msp2",
      dict(arch="sppo-gpt-7b", seq_len=524288, batch=1,
           n_params=6_700_000_000, pp=4, n=8, sp=16, msp=True, msp_split=2)),
+    ("gpt7b_reduced_pp2_optoff_plain",
+     dict(arch="sppo-gpt-7b", reduced=True, seq_len=256, batch=4,
+          n_params=None, pp=2, n=4, sp=2, msp=False,
+          offload_moments=True)),
+    ("gpt7b_reduced_pp2_optoff_msp2",
+     dict(arch="sppo-gpt-7b", reduced=True, seq_len=256, batch=4,
+          n_params=None, pp=2, n=4, sp=2, msp=True, msp_split=2,
+          offload_moments=True)),
 ]
 
 
@@ -39,6 +49,13 @@ def trace_lines(spec: dict) -> list:
     """Deterministic text form of one config's simulated trace."""
     spec = dict(spec)
     cfg = get_config(spec.pop("arch"))
+    if spec.pop("reduced", False):
+        cfg = cfg.reduced()
+    if spec.get("n_params") is None:
+        from repro.models.model_zoo import build_model
+        from repro.parallel import specs as SP
+        spec["n_params"] = SP.count_active_params(
+            build_model(cfg), spec["pp"], spec["pp"])
     total, alphas, res = solver.simulate_candidate(cfg, **spec)
     lines = [
         "# golden schedule trace — regenerate with "

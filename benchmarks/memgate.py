@@ -1,4 +1,4 @@
-"""CI memory-gate: measured-vs-predicted peak activation honesty check.
+"""CI memory-gate: measured-vs-predicted peak memory honesty check.
 
   PYTHONPATH=src python -m benchmarks.memgate \
       --budgets benchmarks/budgets.json --out memledger/ [--update]
@@ -7,16 +7,25 @@ For every gate in budgets.json this builds the cell (offload on, pp>1
 emulated mesh), executes one real train-grad step through
 runtime/memledger.measure, and enforces two contracts:
 
-  1. honesty gate — measured peak tagged-activation bytes may not exceed
-     the simulator's prediction (costmodel.chunk_act_bytes ->
-     simulate.spmd_tick_peak over the runner's feed events) by more than
-     ``max_ratio`` (1.10: the §5.2 recurrence must describe reality);
+  1. honesty gate — measured peak bytes may not exceed the simulator's
+     prediction (costmodel.chunk_act_bytes -> simulate.spmd_tick_peak over
+     the runner's feed events) by more than ``max_ratio`` (1.10: the §5.2
+     recurrence must describe reality);
   2. budget diff — the measured peak must stay within ``band`` of the
      value recorded in budgets.json, so any intentional change to the
      memory behavior shows up as a reviewed diff to that file
      (regenerate with --update).
 
-The per-tick ledger CSVs land in --out and are uploaded as a CI artifact.
+Gates with ``"offload_moments": true`` additionally measure the executed
+optimizer-state offload (DESIGN.md §11): one real AdamW update over the
+measured grads, the ledger's moments channel (opt_m@/opt_v@ jaxpr walk +
+update-phase probes + the one-H2D-per-leaf copy count), the *combined*
+activations+moments device peak against ``predicted_combined_peak``, and a
+strict-reduction check — moment offload must measurably lower the combined
+device peak vs the same cell with ``offload_moments=False``.
+
+The per-tick ledger CSVs (including the moments column) land in --out and
+are uploaded as a CI artifact.
 """
 import os
 
@@ -37,13 +46,18 @@ DTYPES = {"bfloat16": jnp.bfloat16, "float32": jnp.float32}
 
 
 def run_gate(gate: dict):
-    """Returns (measured_peak, predicted_peak, ledger)."""
+    """Returns (measured_peak, predicted_peak, ledger, cell).
+
+    Plain gates compare the §5.2 activation peak; opt-state gates
+    (``offload_moments``) compare the combined activations+moments device
+    peak and measure the moments channel from a real AdamW update."""
     import dataclasses
 
     cfg = get_config(gate["arch"])
     if gate.get("reduced", True):
         cfg = cfg.reduced()
     mdef = build_model(cfg)
+    opt_gate = bool(gate.get("offload_moments", False))
     shape = ShapeConfig(gate["name"], gate["seq"], gate["batch"], "train")
     cell = runner.resolve_cell(
         mdef, shape, data_size=gate["data_size"],
@@ -51,12 +65,54 @@ def run_gate(gate: dict):
         overrides=dict(pp=gate["pp"], dp=gate["data_size"] // gate["pp"],
                        n_chunks=gate["n_chunks"], grad_accum=1,
                        partition="length", offload=True,
-                       msp=gate.get("msp", False)))
+                       msp=gate.get("msp", False),
+                       offload_moments=opt_gate,
+                       opt_dtype=gate.get("opt_dtype", "float32")))
     cell = dataclasses.replace(cell, dtype=DTYPES[gate.get("dtype",
                                                            "bfloat16")])
     led = ml.measure(cell, data_size=gate["data_size"],
-                     model_size=gate["model_size"])
-    return led.peak_bytes, ml.predicted_spmd_peak(cell), led
+                     model_size=gate["model_size"], opt=opt_gate)
+    if opt_gate:
+        measured = led.combined_peak_bytes
+        predicted = ml.predicted_combined_peak(
+            cell, data_size=gate["data_size"])
+    else:
+        measured, predicted = led.peak_bytes, ml.predicted_spmd_peak(cell)
+    return measured, predicted, led, cell
+
+
+def moment_reduction_check(gate: dict, cell, led) -> list:
+    """The executed path must *pay off*: the same cell with
+    offload_moments=False has to show a strictly larger measured combined
+    device peak, and the offloaded update must honor the
+    one-H2D-per-moment-leaf contract."""
+    import dataclasses
+
+    failures = []
+    cell_off = dataclasses.replace(
+        cell, plan=dataclasses.replace(cell.plan, offload_moments=False))
+    led_off = ml.measure(cell_off, data_size=gate["data_size"],
+                         model_size=gate["model_size"], opt=True,
+                         baseline=False)
+    if not led.combined_peak_bytes < led_off.combined_peak_bytes:
+        failures.append(
+            f"{gate['name']}: moment offload did not reduce the measured "
+            f"combined device peak ({led.combined_peak_bytes} B offloaded "
+            f"vs {led_off.combined_peak_bytes} B resident)")
+    mom = led.moments
+    if mom is None:
+        failures.append(f"{gate['name']}: no moments channel was measured")
+    elif mom.mode == "explicit" and mom.host_kind is not None \
+            and mom.h2d_count != 2 * mom.n_leaves:
+        failures.append(
+            f"{gate['name']}: explicit update staged {mom.h2d_count} H2D "
+            f"copies for {mom.n_leaves} moment-tree leaves — the "
+            "one-H2D-per-moment-leaf contract is broken")
+    print(f"{gate['name']:32s} moments: offloaded "
+          f"{led.moments.host_bytes if led.moments else 0:>12d} B host, "
+          f"combined {led.combined_peak_bytes} B vs resident "
+          f"{led_off.combined_peak_bytes} B")
+    return failures
 
 
 def main(argv=None):
@@ -74,7 +130,7 @@ def main(argv=None):
     failures = []
     for gate in budgets["gates"]:
         name = gate["name"]
-        measured, predicted, led = run_gate(gate)
+        measured, predicted, led, cell = run_gate(gate)
         led.to_csv(os.path.join(args.out, f"memledger-{name}.csv"))
         ratio = measured / max(predicted, 1)
         exposed = led.exposed_transfer_s
@@ -83,8 +139,10 @@ def main(argv=None):
               f"step {led.step_time_s:.3f}s  exposed "
               f"{0.0 if exposed is None else exposed:.3f}s")
         if not led.runtime_coverage_ok():
-            failures.append(f"{name}: runtime probes missed ticks "
-                            "(pipeline did not fully execute)")
+            failures.append(f"{name}: runtime probes missed ticks or the "
+                            "update phase (the step did not fully execute)")
+        if gate.get("offload_moments"):
+            failures.extend(moment_reduction_check(gate, cell, led))
         if ratio > gate["max_ratio"]:
             failures.append(
                 f"{name}: measured peak {measured} B exceeds "

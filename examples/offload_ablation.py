@@ -90,6 +90,23 @@ def main(argv=None):
           f"ratio {led.peak_bytes/max(predicted,1):.4f}  "
           f"host bytes {led.host_bytes/2**20:.2f} MiB  "
           f"exposed transfer {exposed*1e3:.1f} ms")
+
+    # optimizer-state offload (DESIGN.md §11): combined activations+moments
+    # device peak, host-resident vs device-resident AdamW moments.  Skipped
+    # under --fast: the CI smoke (test_examples) runs in both backend-matrix
+    # legs, and the opt-state measurement already runs once in the
+    # memory-gate job (memgate + the optstate suite).
+    import dataclasses
+    for mom in () if args.fast else (True, False):
+        c = dataclasses.replace(
+            cell, plan=dataclasses.replace(cell.plan, offload_moments=mom))
+        led_m = ml.measure(c, data_size=1, model_size=1, baseline=False,
+                           opt=True)
+        tag = "host-resident" if mom else "device-resident"
+        print(f"moments {tag:15s} combined peak "
+              f"{led_m.combined_peak_bytes/2**20:.2f} MiB  "
+              f"(moments on host {led_m.moments.host_bytes/2**20:.2f} MiB, "
+              f"H2D copies/step {led_m.moments.h2d_count})")
     return led
 
 

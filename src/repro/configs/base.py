@@ -186,6 +186,12 @@ class ParallelPlan:
     remat: str = "sppo"        # sppo | full | none
     zero1: bool = True         # shard optimizer states over dp (and pod)
     opt_dtype: str = "float32"  # moment dtype; deepseek uses bfloat16
+    # executed optimizer-state offload (DESIGN.md §11): AdamW m/v live in
+    # host memory kinds between steps.  moments_mode "explicit" stages one
+    # H2D per moment leaf into the device update and one D2H back;
+    # "xla" (legacy) keeps host-committed shardings and lets XLA stream.
+    offload_moments: bool = False
+    moments_mode: str = "explicit"
     grad_accum: int = 1
     # decode-only: microbatch pipeline over batch dim when pp > 1
     decode_microbatch: int = 1
@@ -208,6 +214,8 @@ class ParallelPlan:
             f"msp_split({self.msp_split}) must be >= 2 (sub-chunks per ramp)")
         assert self.offload_mode in ("explicit", "xla"), (
             f"offload_mode({self.offload_mode!r}) must be explicit|xla")
+        assert self.moments_mode in ("explicit", "xla"), (
+            f"moments_mode({self.moments_mode!r}) must be explicit|xla")
 
 
 # ---------------------------------------------------------------------------

@@ -174,6 +174,31 @@ def chunk_act_bytes(cfg, lengths, *, batch: int, pp: int, sp: int,
     return [per_tok * b * ln for ln in lengths]
 
 
+# ---------------------------------------------------------------------------
+# Optimizer-state (AdamW moment) bytes — the moments-channel unit of account
+# ---------------------------------------------------------------------------
+
+_OPT_ITEMSIZE = {"float32": 4, "bfloat16": 2, "float16": 2}
+
+
+def moment_bytes_per_param(opt_dtype="float32") -> float:
+    """AdamW first+second moment bytes per parameter at the given moment
+    dtype — the closed form behind the ledger's `moments` channel: the
+    jaxpr walk over the ``opt_m@``/``opt_v@`` names must sum to exactly
+    ``n_params * moment_bytes_per_param(opt_dtype)``
+    (tests/test_opt_offload.py)."""
+    if isinstance(opt_dtype, str):
+        itemsize = _OPT_ITEMSIZE[opt_dtype]
+    else:
+        itemsize = np.dtype(opt_dtype).itemsize
+    return 2.0 * itemsize
+
+
+def opt_state_bytes(n_params: int, opt_dtype="float32") -> float:
+    """Total AdamW moment bytes for `n_params` parameters."""
+    return n_params * moment_bytes_per_param(opt_dtype)
+
+
 def chunk_time_est(flops: float, bytes_moved: float, hw: Hardware,
                    n_ops: int = 1) -> float:
     """Roofline-max execution time + kernel overheads (Fig. 7 shape)."""

@@ -28,15 +28,7 @@ from typing import Optional, Sequence
 import jax
 from jax.ad_checkpoint import checkpoint_name
 
-try:  # public home moves across jax versions
-    from jax.sharding import TransferToMemoryKind as _TransferToMemoryKind
-except ImportError:  # pragma: no cover - version-dependent
-    try:
-        from jax._src.sharding_impls import (
-            TransferToMemoryKind as _TransferToMemoryKind)
-    except ImportError:
-        _TransferToMemoryKind = None
-
+from repro.runtime import hostmem
 
 OFF_NAME = "act_off"
 KEEP_NAME = "act_keep"
@@ -181,31 +173,11 @@ def null_tag(t):
 # device (H2D).  Double-buffering falls out of the dataflow: chunk i's D2H
 # depends only on chunk i's forward, so it can overlap chunk i+1's compute,
 # and the H2D is issued by the autodiff exactly at chunk i's backward.
-# DESIGN.md §10 records the contract and the CPU fallback semantics.
+# DESIGN.md §10 records the contract and the CPU fallback semantics.  The
+# memory-kind probe and the D2H/H2D primitives are shared with the
+# optimizer-moment offload path (optim/adamw.py) via runtime/hostmem.py.
 
-_HOST_KIND_CACHE: dict = {}
-
-
-def host_memory_kind(backend: Optional[str] = None) -> Optional[str]:
-    """Best host memory kind the default device exposes: 'pinned_host'
-    (TPU/GPU) > 'unpinned_host' (CPU) > None (no memory-kind support —
-    the staged-copy emulation takes over)."""
-    key = backend or "default"
-    if key in _HOST_KIND_CACHE:
-        return _HOST_KIND_CACHE[key]
-    kind = None
-    if _TransferToMemoryKind is not None:
-        try:
-            dev = jax.devices(backend)[0] if backend else jax.devices()[0]
-            kinds = {m.kind for m in dev.addressable_memories()}
-            for cand in ("pinned_host", "unpinned_host"):
-                if cand in kinds:
-                    kind = cand
-                    break
-        except Exception:  # pragma: no cover - backend-dependent
-            kind = None
-    _HOST_KIND_CACHE[key] = kind
-    return kind
+host_memory_kind = hostmem.host_memory_kind
 
 
 def host_round_trip(t, *, host_kind: Optional[str] = "auto",
@@ -220,13 +192,13 @@ def host_round_trip(t, *, host_kind: Optional[str] = "auto",
     keeps the identical graph structure (a named save point fenced by
     optimization barriers, so XLA must materialize the staged buffer) —
     on either path the round trip is a value-level identity."""
-    kind = host_memory_kind() if host_kind == "auto" else host_kind
+    kind = hostmem.resolve_host_kind(host_kind)
     if kind is None:
         staged = checkpoint_name(jax.lax.optimization_barrier(t), name)
         return jax.lax.optimization_barrier(staged)
-    th = jax.device_put(t, _TransferToMemoryKind(kind))           # D2H
+    th = hostmem.to_host(t, kind)                                 # D2H
     th = checkpoint_name(th, name)                                # host residual
-    return jax.device_put(th, _TransferToMemoryKind("device"))    # H2D
+    return hostmem.to_device(th, kind)                            # H2D
 
 
 def make_exec_tag(alpha: float, *, axis: int = 1,

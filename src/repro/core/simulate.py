@@ -277,6 +277,20 @@ def simulate_schedule(chunk_costs: Sequence[float], *, pp: int,
     return simulate(ev, chunk_costs, pp=pp, **kw)
 
 
+def opt_update_transfer(n_params_local: int, moment_bytes_per_param: float,
+                        d2h_bw: Optional[float],
+                        h2d_bw: Optional[float] = None) -> float:
+    """Post-step optimizer-transfer time for host-resident AdamW moments
+    (DESIGN.md §11): the update stages one H2D of the full local moment set
+    onto the device and one D2H writes the new moments back.  Unlike the
+    activation offload of §5.2 there is no next-chunk compute left to hide
+    under — the last backward has already drained — so the solver charges
+    the full round trip as an epilogue on the iteration time."""
+    vol = n_params_local * moment_bytes_per_param
+    h2d_bw = h2d_bw if h2d_bw is not None else d2h_bw
+    return _xfer(vol, h2d_bw) + _xfer(vol, d2h_bw)
+
+
 def spmd_tick_peak(events: Sequence[Tuple[int, int, int]], *, pp: int,
                    chunk_acts: Sequence[float],
                    alphas: Sequence[float]) -> Tuple[float, list]:

@@ -43,20 +43,31 @@ def iteration_time(cfg, seq_len: int, batch: int, n_params: int,
                    pp: int, n: int, sp: int,
                    hw: cm.Hardware = cm.V5E, *, msp: bool = False,
                    msp_split: int = 2,
-                   offload: bool = True) -> Tuple[float, tuple]:
+                   offload: bool = True,
+                   offload_moments: bool = False,
+                   opt_dtype: str = "float32") -> Tuple[float, tuple]:
     """Simulated per-iteration wall time for one dp replica (seconds)."""
     t, alphas, _ = simulate_candidate(cfg, seq_len, batch, n_params, pp, n,
                                       sp, hw, msp=msp, msp_split=msp_split,
-                                      offload=offload)
+                                      offload=offload,
+                                      offload_moments=offload_moments,
+                                      opt_dtype=opt_dtype)
     return t, alphas
 
 
 def simulate_candidate(cfg, seq_len: int, batch: int, n_params: int,
                        pp: int, n: int, sp: int,
                        hw: cm.Hardware = cm.V5E, *, msp: bool = False,
-                       msp_split: int = 2, offload: bool = True
+                       msp_split: int = 2, offload: bool = True,
+                       offload_moments: bool = False,
+                       opt_dtype: str = "float32"
                        ) -> Tuple[float, tuple, sim.SimResult]:
-    """Build the candidate's cost/activation profile and play it out."""
+    """Build the candidate's cost/activation profile and play it out.
+
+    offload_moments adds the optimizer-state epilogue (DESIGN.md §11): the
+    per-device moment set crosses the host link once in each direction per
+    step, after the last backward — nothing left to hide it under, so it is
+    charged in full on top of the pipeline playout."""
     r = part.flops_per_token_ratio(cfg)
     sched = part.partition(seq_len, n, cfg, "length")
     costs = part.chunk_costs(sched, r)
@@ -92,7 +103,12 @@ def simulate_candidate(cfg, seq_len: int, batch: int, n_params: int,
         chunk_acts=act, alphas=alphas,
         d2h_bw=hw.d2h_bw, p2p_bytes=p2p, ici_bw=hw.ici_bw,
         bwd_ratio=bwd_ratio)
-    return res.total, alphas, res
+    total = res.total
+    if offload_moments:
+        total += sim.opt_update_transfer(
+            n_params / chips, cm.moment_bytes_per_param(opt_dtype),
+            hw.d2h_bw)
+    return total, alphas, res
 
 
 def solve(cfg, seq_len: int, batch: int, n_params: int,

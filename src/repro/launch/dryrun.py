@@ -112,17 +112,23 @@ def run_cell(arch: str, shape_name: str, mesh, *, verbose=True):
         step = make_train_step(cell, mesh)
         opt_dtype = jnp.bfloat16 if cell.plan.opt_dtype == "bfloat16" else jnp.float32
         ostruct = jax.eval_shape(
-            lambda p: adamw.init_state(p, opt_dtype), pstruct)
+            lambda p: adamw.init_state(
+                p, opt_dtype, offload_moments=cell.plan.offload_moments),
+            pstruct)
         oshard_specs = SP.opt_specs(
             {"stages": SP.stage_specs(cell.mdef, cell.plan.pp),
              "globals": SP.globals_specs(cell.mdef)},
             zero1_pod=cell.plan.zero1 and dims["pods"] > 1,
             param_struct=pstruct, model_size=dims["model"],
             pods=dims["pods"])
-        mk = "pinned_host" if cfg.name.startswith("deepseek") else None
-        moment_shard = jax.tree_util.tree_map(
-            lambda s: NamedSharding(mesh, s, memory_kind=mk) if mk
-            else NamedSharding(mesh, s), oshard_specs)
+        # plan-driven host residency (DESIGN.md §11): the big-model plans
+        # set offload_moments, and the dry-run prices the same placement
+        # the executed path deploys — the "auto" probe resolves to the
+        # backend's supported host kind (pinned_host on the TPU target,
+        # unpinned_host on this CPU container), exactly as init_state does
+        moment_shard = SP.moment_shardings(
+            mesh, oshard_specs,
+            offload_moments=cell.plan.offload_moments)
         oshard = type(ostruct)(step=NamedSharding(mesh, P()),
                                m=moment_shard, v=moment_shard)
         args = (pstruct, ostruct, bstruct)

@@ -64,6 +64,14 @@ def main(argv=None):
     ap.add_argument("--pp", type=int, default=None)
     ap.add_argument("--n-chunks", type=int, default=None)
     ap.add_argument("--no-offload", action="store_true")
+    ap.add_argument("--offload-moments", action="store_true",
+                    help="keep AdamW m/v host-resident (executed "
+                         "ZeRO-Offload analogue, DESIGN.md §11)")
+    ap.add_argument("--moments-mode", default=None,
+                    choices=["explicit", "xla"],
+                    help="explicit: one H2D/D2H device_put per moment leaf "
+                         "in the update; xla: host-committed shardings, "
+                         "streaming delegated to XLA")
     ap.add_argument("--msp", action="store_true",
                     help="multiplexed sequence partitioning (pp > 1 only). "
                          "NOTE: on the lock-step SPMD runner the ramp "
@@ -97,6 +105,10 @@ def main(argv=None):
         overrides["n_chunks"] = args.n_chunks
     if args.no_offload:
         overrides["offload"] = False
+    if args.offload_moments:
+        overrides["offload_moments"] = True
+    if args.moments_mode:
+        overrides["moments_mode"] = args.moments_mode
     if args.msp:
         overrides["msp"] = True
         overrides["msp_split"] = args.msp_split
@@ -114,7 +126,14 @@ def main(argv=None):
     params, pspecs, pshard = build_params(cell, mesh)
     opt_dtype = (jnp.bfloat16 if cell.plan.opt_dtype == "bfloat16"
                  else jnp.float32)
-    opt_state = adamw.init_state(params, opt_dtype)
+    # moments are born in host memory when the plan offloads them — no
+    # device-side opt_dtype copy of the params ever materializes at init
+    opt_state = adamw.init_state(
+        params, opt_dtype, offload_moments=cell.plan.offload_moments)
+    if cell.plan.offload_moments:
+        from repro.runtime import hostmem
+        log.info("optimizer moments host-resident (kind=%s, mode=%s)",
+                 hostmem.host_memory_kind(), cell.plan.moments_mode)
     step_fn = jax.jit(
         make_train_step(cell, mesh,
                         lr_kwargs=dict(peak=args.lr, warmup=20,

@@ -1,21 +1,46 @@
-"""AdamW with global-norm clipping, schedules, and memory knobs.
+"""AdamW with global-norm clipping, schedules, and *executed* memory knobs.
 
 Runs *outside* shard_map on global (sharded) arrays — XLA/GSPMD inserts the
 (elementwise-free) collectives for the norm reductions.  Memory knobs used by
-the big-model plans (DESIGN.md §4):
+the big-model plans (DESIGN.md §4, §11):
   * ``opt_dtype``: moment dtype (deepseek-v3 uses bf16, as in its report);
-  * ``offload_moments``: place m/v in ``pinned_host`` memory (ZeRO-Offload
-    analogue — thematically the same host-offload machinery SPPO uses for
-    activations); streamed through HBM by XLA during the update;
+  * ``offload_moments``: keep ``AdamWState.m/v`` resident in host memory
+    (ZeRO-Offload analogue — the same host memory kinds and D2H/H2D
+    primitives the activation offload path uses, runtime/hostmem.py).
+    Since PR 4 this is *executed dataflow*, not a sharding hint:
+    ``init_state`` births the moments in host space (no device allocation),
+    and ``apply_update`` under ``moments_mode="explicit"`` stages exactly
+    one H2D per moment leaf, computes the fp32 update on device, and writes
+    the new moments back with one D2H per leaf.  ``moments_mode="xla"``
+    is the legacy path: the moments stay host-committed through their
+    shardings and XLA streams them through HBM during the update.
   * ZeRO-1 across the `pod` axis is expressed through the moment shardings
     built in parallel/specs.py.
+
+Every host-resident moment leaf is tagged with a ``checkpoint_name``
+(``opt_m@<i>`` / ``opt_v@<i>``) so the memory ledger
+(runtime/memledger.moment_bytes_from_jaxpr) can account the exact bytes kept
+off-device from the traced update — the optimizer-state analogue of the
+``act_off@<tick>`` activation names.
 """
 from __future__ import annotations
 
-from typing import NamedTuple
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
+from jax.ad_checkpoint import checkpoint_name
+
+from repro.runtime import hostmem
+
+# checkpoint-name bases for the host-resident moments; leaf-qualified as
+# opt_m@<leaf-index> so the ledger attributes bytes per leaf exactly
+OPT_M_NAME = "opt_m"
+OPT_V_NAME = "opt_v"
+
+
+def moment_names(i: int):
+    return f"{OPT_M_NAME}@{i}", f"{OPT_V_NAME}@{i}"
 
 
 class AdamWState(NamedTuple):
@@ -24,8 +49,20 @@ class AdamWState(NamedTuple):
     v: object         # pytree like params
 
 
-def init_state(params, opt_dtype=jnp.float32) -> AdamWState:
-    zeros = lambda p: jnp.zeros(p.shape, opt_dtype)
+def init_state(params, opt_dtype=jnp.float32, *, offload_moments: bool = False,
+               host_kind="auto") -> AdamWState:
+    """Zero moments, placed where they will live.
+
+    With ``offload_moments`` the zeros are *born in host memory*
+    (hostmem.host_zeros: numpy buffer -> device_put into the host space), so
+    initialization never materializes an opt_dtype copy of the parameters in
+    device memory — the step-0 peak equals the steady-state peak
+    (regression-tested in tests/test_opt_offload.py)."""
+    if offload_moments:
+        kind = hostmem.resolve_host_kind(host_kind)
+        zeros = lambda p: hostmem.host_zeros(p.shape, opt_dtype, kind, like=p)
+    else:
+        zeros = lambda p: jnp.zeros(p.shape, opt_dtype)
     return AdamWState(step=jnp.zeros((), jnp.int32),
                       m=jax.tree_util.tree_map(zeros, params),
                       v=jax.tree_util.tree_map(zeros, params))
@@ -45,13 +82,30 @@ def global_norm(tree) -> jax.Array:
 
 
 def apply_update(params, grads, state: AdamWState, *, lr, b1=0.9, b2=0.95,
-                 eps=1e-8, weight_decay=0.1, clip_norm=1.0):
-    """One AdamW step. Returns (new_params, new_state, metrics)."""
+                 eps=1e-8, weight_decay=0.1, clip_norm=1.0,
+                 offload_moments: bool = False,
+                 moments_mode: str = "explicit", host_kind="auto",
+                 probe: Optional[callable] = None):
+    """One AdamW step. Returns (new_params, new_state, metrics).
+
+    offload_moments + moments_mode="explicit": per moment leaf, exactly one
+    H2D device_put brings the host-resident moment on device, the fp32
+    update runs there, and one D2H writes the new moment back to host —
+    the round trip is value-level identity, so offload on/off updates are
+    equal (tests/test_opt_offload.py).  moments_mode="xla" keeps the legacy
+    behavior: no explicit copies; placement/streaming delegated to XLA via
+    the moments' committed host shardings.
+
+    probe: optional identity hook (runtime/memledger.update_probe) threaded
+    onto the step counter — runtime evidence that the update phase executed.
+    """
+    assert moments_mode in ("explicit", "xla"), moments_mode
     gnorm = global_norm(grads)
     scale = jnp.minimum(1.0, clip_norm / jnp.maximum(gnorm, 1e-12))
     step = state.step + 1
     bc1 = 1 - b1 ** step.astype(jnp.float32)
     bc2 = 1 - b2 ** step.astype(jnp.float32)
+    kind = hostmem.resolve_host_kind(host_kind) if offload_moments else None
 
     def upd(p, g, m, v):
         g = g.astype(jnp.float32) * scale
@@ -69,7 +123,25 @@ def apply_update(params, grads, state: AdamWState, *, lr, b1=0.9, b2=0.95,
     flat_g = treedef.flatten_up_to(grads)
     flat_m = treedef.flatten_up_to(state.m)
     flat_v = treedef.flatten_up_to(state.v)
-    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    out = []
+    for i, (p, g, m, v) in enumerate(zip(flat_p, flat_g, flat_m, flat_v)):
+        if offload_moments:
+            nm, nv = moment_names(i)
+            # the *host-resident* buffer carries the name, mirroring the
+            # act_off contract: what the ledger counts is what lives off
+            # device between steps
+            m = checkpoint_name(m, nm)
+            v = checkpoint_name(v, nv)
+            if moments_mode == "explicit":
+                m = hostmem.to_device(m, kind)     # one H2D per moment leaf
+                v = hostmem.to_device(v, kind)
+        p_new, m_new, v_new = upd(p, g, m, v)
+        if offload_moments and moments_mode == "explicit":
+            m_new = hostmem.to_host(m_new, kind)   # one D2H writes back
+            v_new = hostmem.to_host(v_new, kind)
+        out.append((p_new, m_new, v_new))
+    if probe is not None:
+        step = probe(step)
     new_p = treedef.unflatten([o[0] for o in out])
     new_m = treedef.unflatten([o[1] for o in out])
     new_v = treedef.unflatten([o[2] for o in out])

@@ -92,6 +92,10 @@ def resolve_plan(cfg: ModelConfig, shape: ShapeConfig, *, data_size: int = 16,
         remat="sppo" if shape.kind == "train" else "none",
         zero1=pods > 1,
         opt_dtype="bfloat16" if cfg.name.startswith("deepseek") else "float32",
+        # big models keep AdamW m/v host-resident (executed ZeRO-Offload
+        # analogue, DESIGN.md §11); only train shapes carry an optimizer
+        offload_moments=(shape.kind == "train"
+                         and cfg.name.startswith("deepseek")),
         grad_accum=accum,
         decode_microbatch=micro,
     )

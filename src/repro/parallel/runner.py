@@ -457,7 +457,10 @@ def make_train_step(cell: Cell, mesh, *, lr_kwargs=None, ledger=None):
         loss, gs, gg = smapped(params["stages"], params["globals"], batch)
         grads = {"stages": gs, "globals": gg}
         lr = adamw.cosine_lr(opt_state.step, **lr_kwargs)
-        new_p, new_o, met = adamw.apply_update(params, grads, opt_state, lr=lr)
+        new_p, new_o, met = adamw.apply_update(
+            params, grads, opt_state, lr=lr,
+            offload_moments=plan.offload_moments,
+            moments_mode=plan.moments_mode)
         met["loss"] = loss
         return new_p, new_o, met
 

@@ -1,0 +1,147 @@
+"""Shared host-memory-kind helpers (DESIGN.md §10/§11).
+
+Both executed-offload paths — activations (core/offload.py) and optimizer
+moments (optim/adamw.py) — place tensors into the best host memory space the
+backend exposes and move them back with explicit ``device_put`` dataflow:
+
+  * ``pinned_host``   on TPU/GPU (DMA-able, the paper's offload target);
+  * ``unpinned_host`` on CPU (XLA folds host into device, but the program
+    structure — and therefore the jaxpr accounting — is identical);
+  * ``None``          when the backend has no memory kinds at all, in which
+    case callers fall back to the barrier-fenced staged-copy emulation
+    (``optimization_barrier`` around the named save point) so the graph
+    keeps the same shape.
+
+This module is the single home for the memory-kind probe and the D2H/H2D
+primitives; it imports nothing from ``repro`` so every layer (core, optim,
+runtime, parallel) can use it without cycles.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+try:  # public home moves across jax versions
+    from jax.sharding import TransferToMemoryKind
+except ImportError:  # pragma: no cover - version-dependent
+    try:
+        from jax._src.sharding_impls import TransferToMemoryKind
+    except ImportError:
+        TransferToMemoryKind = None
+
+DEVICE_KIND = "device"
+HOST_KIND_PREFERENCE = ("pinned_host", "unpinned_host")
+
+_HOST_KIND_CACHE: dict = {}
+
+
+def host_memory_kind(backend: Optional[str] = None) -> Optional[str]:
+    """Best host memory kind the default device exposes: 'pinned_host'
+    (TPU/GPU) > 'unpinned_host' (CPU) > None (no memory-kind support —
+    the staged-copy emulation takes over)."""
+    key = backend or "default"
+    if key in _HOST_KIND_CACHE:
+        return _HOST_KIND_CACHE[key]
+    kind = None
+    if TransferToMemoryKind is not None:
+        try:
+            dev = jax.devices(backend)[0] if backend else jax.devices()[0]
+            kinds = {m.kind for m in dev.addressable_memories()}
+            for cand in HOST_KIND_PREFERENCE:
+                if cand in kinds:
+                    kind = cand
+                    break
+        except Exception:  # pragma: no cover - backend-dependent
+            kind = None
+    _HOST_KIND_CACHE[key] = kind
+    return kind
+
+
+def resolve_host_kind(host_kind="auto") -> Optional[str]:
+    """'auto' -> probe the backend; anything else passes through (a kind
+    string, or None to force the barrier-fenced emulation)."""
+    return host_memory_kind() if host_kind == "auto" else host_kind
+
+
+def _is_traced(t) -> bool:
+    return isinstance(t, jax.core.Tracer)
+
+
+def _default_device_kind(t) -> str:
+    """The default (device) memory kind of `t`'s devices — 'device' on
+    TPU/GPU, 'unpinned_host' on CPU (host == device there)."""
+    try:
+        dev = next(iter(t.devices()))
+    except Exception:  # pragma: no cover - non-committed values
+        dev = jax.devices()[0]
+    return dev.default_memory().kind
+
+
+def to_host(t, kind: Optional[str]):
+    """One D2H: place `t` in host memory space (emulation: barrier fence,
+    so XLA must materialize the staged buffer instead of fusing it away).
+    Inside jit this is the ``TransferToMemoryKind`` device_put form the
+    ledger's copy accounting counts; eagerly it commits the concrete
+    array's own sharding into the host kind."""
+    if kind is None:
+        return jax.lax.optimization_barrier(t)
+    if _is_traced(t):
+        return jax.device_put(t, TransferToMemoryKind(kind))
+    return jax.device_put(t, host_sharding_like(t, kind))
+
+
+def to_device(t, kind: Optional[str]):
+    """One H2D: bring a host-resident `t` back to device memory space.
+    `kind` is the host kind the value lives in (None = emulation fence)."""
+    if kind is None:
+        return jax.lax.optimization_barrier(t)
+    if _is_traced(t):
+        return jax.device_put(t, TransferToMemoryKind(DEVICE_KIND))
+    return jax.device_put(t, host_sharding_like(t, _default_device_kind(t)))
+
+
+def host_sharding_like(arr, kind: str):
+    """A sharding placing `arr`'s layout into `kind` host memory: the
+    array's own sharding re-kinded when it carries one (NamedSharding /
+    SingleDeviceSharding both support with_memory_kind), else a
+    single-device host placement."""
+    sh = getattr(arr, "sharding", None)
+    if sh is not None and hasattr(sh, "with_memory_kind"):
+        try:
+            return sh.with_memory_kind(kind)
+        except Exception:  # pragma: no cover - exotic shardings
+            pass
+    from jax.sharding import SingleDeviceSharding
+
+    return SingleDeviceSharding(jax.devices()[0], memory_kind=kind)
+
+
+def host_zeros(shape, dtype, kind: Optional[str], like=None):
+    """Zeros born in host memory: the buffer is built host-side (numpy) and
+    placed directly into the host memory space, so *no device allocation
+    ever happens* — the init_state fix for the step-0 peak spike
+    (DESIGN.md §11).  With no memory kinds the plain device zeros are the
+    only option (host == device there anyway).  Under abstract tracing
+    (eval_shape / jit of init — the dry-run's shape-only path) a concrete
+    host buffer must not materialize, so this falls back to traced zeros;
+    the real init paths (launch/train.py, memledger) are eager."""
+    import numpy as np
+
+    import jax.numpy as jnp
+
+    if kind is None:
+        return jnp.zeros(shape, dtype)
+    if _is_traced(like):
+        # traced zeros, immediately host-placed — the jaxpr keeps the
+        # host-residency fact (memledger.init_moment_device_bytes nets
+        # host-placed creations out of the device-space count)
+        return to_host(jnp.zeros(shape, dtype), kind)
+    host = np.zeros(shape, np.dtype(dtype))
+    return jax.device_put(host, host_sharding_like(like, kind))
+
+
+def memory_kind_of(arr) -> Optional[str]:
+    """The committed memory kind of a concrete array (None if unknown)."""
+    sh = getattr(arr, "sharding", None)
+    return getattr(sh, "memory_kind", None)

@@ -1,7 +1,7 @@
-"""Memory ledger: measured per-tick activation accounting for the executed
-offload path (DESIGN.md §10).
+"""Memory ledger: measured per-tick activation + optimizer-state accounting
+for the executed offload paths (DESIGN.md §10/§11).
 
-Two measurement channels, both taken from the *real* program:
+Measurement channels, all taken from the *real* program:
 
 1. **Tagged-byte accounting** — every pipeline tick tags its Type-1
    activations with tick-qualified checkpoint names (``act_off@t3`` /
@@ -22,10 +22,22 @@ Two measurement channels, both taken from the *real* program:
    against an offload-off run (see ``measure``) — on a TPU backend the
    same probes bracket the real async copies.
 
+3. **Moments channel** (PR 4) — when the plan offloads optimizer state,
+   ``apply_update`` names every host-resident AdamW moment leaf
+   (``opt_m@<i>`` / ``opt_v@<i>``, optim/adamw.py) and stages exactly one
+   H2D per leaf into the device update.  ``moment_bytes_from_jaxpr`` walks
+   the traced update for those names, ``device_put_kinds`` counts the
+   explicit H2D/D2H copies per memory kind, and ``update_probe`` is the
+   update-phase runtime-evidence hook.  The measured numbers must match
+   the cost model's closed form (``costmodel.moment_bytes_per_param``) and
+   the one-H2D-per-leaf contract (tests/test_opt_offload.py).
+
 The ledger then replays the §5.2 recurrence M_t = M_{t-1} + A_t −
 α_{t-1}A_{t-1} over the measured per-tick bytes; CI's memory-gate compares
-that measured peak against the simulator's prediction from the analytic
-cost model (core/simulate.spmd_tick_peak over costmodel.chunk_act_bytes).
+that measured peak — plus the device-resident moments term — against the
+simulator's prediction from the analytic cost model
+(core/simulate.spmd_tick_peak over costmodel.chunk_act_bytes, plus
+costmodel.moment_bytes_per_param for the opt-state gates).
 """
 from __future__ import annotations
 
@@ -134,6 +146,125 @@ def tagged_bytes_from_jaxpr(closed_jaxpr) -> Dict[str, Dict[str, int]]:
 
 
 # ---------------------------------------------------------------------------
+# Moments channel: optimizer-state bytes + explicit-copy accounting
+# ---------------------------------------------------------------------------
+
+
+def moment_bytes_from_jaxpr(closed_jaxpr) -> Dict[str, object]:
+    """{"m": bytes, "v": bytes, "leaves": {name: bytes}} from the traced
+    optimizer update: the aval bytes behind every leaf-qualified
+    ``opt_m@<i>`` / ``opt_v@<i>`` checkpoint name (optim/adamw.py).  Like
+    the activation walk, shapes are static facts of the executed program —
+    exact accounting, not an estimate."""
+    from repro.optim.adamw import OPT_M_NAME, OPT_V_NAME
+
+    raw: Dict[str, int] = {}
+    _walk(closed_jaxpr.jaxpr, 1, raw)
+    leaves = {nm: b for nm, b in raw.items()
+              if nm.startswith(OPT_M_NAME + "@")
+              or nm.startswith(OPT_V_NAME + "@")}
+    m_b = sum(b for nm, b in leaves.items() if nm.startswith(OPT_M_NAME))
+    v_b = sum(b for nm, b in leaves.items() if nm.startswith(OPT_V_NAME))
+    return {"m": m_b, "v": v_b, "leaves": leaves}
+
+
+def _walk_device_puts(jaxpr, out: Dict[str, int]) -> None:
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name == "device_put":
+            for dev in eqn.params.get("devices", ()):
+                kind = getattr(dev, "memory_kind", None)
+                if kind is not None:
+                    out[kind] = out.get(kind, 0) + 1
+        for v in eqn.params.values():
+            for sub in _sub_jaxprs(v):
+                _walk_device_puts(sub, out)
+
+
+def device_put_kinds(closed_jaxpr) -> Dict[str, int]:
+    """{memory_kind: count} of explicit ``device_put`` equations in a
+    traced program — ``counts["device"]`` is the H2D copies, host kinds
+    are the D2H side.  The explicit moments path must show exactly one H2D
+    per moment leaf per step (the one-copy contract, DESIGN.md §11)."""
+    out: Dict[str, int] = {}
+    _walk_device_puts(closed_jaxpr.jaxpr, out)
+    return out
+
+
+def init_moment_device_bytes(params, opt_dtype, *, offload_moments: bool,
+                             host_kind="auto") -> int:
+    """Bytes of moment zeros that end up resident in *device* memory space
+    after ``adamw.init_state``, from the traced init: creation equations
+    (``broadcast_in_dim`` — jnp.zeros) allocate in the default device
+    space; creations that are immediately host-placed (hostmem.host_zeros
+    emits zeros → host-kind device_put under tracing, and a numpy buffer →
+    host placement eagerly) are netted out.  The step-0 peak regression
+    (tests/test_opt_offload.py) asserts this is 0 when moments are
+    offloaded."""
+    from repro.optim import adamw
+    from repro.runtime import hostmem
+
+    cjx = jax.make_jaxpr(lambda ps: adamw.init_state(
+        ps, opt_dtype, offload_moments=offload_moments,
+        host_kind=host_kind))(params)
+    created: Dict[object, int] = {}
+    dev = 0
+    for eqn in cjx.jaxpr.eqns:
+        if eqn.primitive.name == "broadcast_in_dim":
+            nbytes = sum(_aval_bytes(v.aval) for v in eqn.outvars)
+            dev += nbytes
+            for v in eqn.outvars:
+                created[v] = _aval_bytes(v.aval)
+        elif eqn.primitive.name == "device_put":
+            kinds = [getattr(d, "memory_kind", None)
+                     for d in eqn.params.get("devices", ())]
+            if kinds and all(k not in (None, hostmem.DEVICE_KIND)
+                             for k in kinds):
+                for v in eqn.invars:
+                    dev -= created.pop(v, 0)
+    return dev
+
+
+@dataclass
+class MomentChannel:
+    """Measured optimizer-state residency for one cell's update step."""
+
+    offloaded: bool
+    mode: str                      # moments_mode: explicit | xla
+    opt_dtype: str
+    host_kind: Optional[str]
+    m_bytes: int                   # real state buffers (Σ leaf nbytes)
+    v_bytes: int
+    n_leaves: int                  # leaves per moment tree
+    max_pair_bytes: int            # largest single-leaf m+v pair
+    named_bytes: int               # jaxpr walk over opt_m@/opt_v@ names
+    h2d_count: int                 # explicit copies into device space
+    d2h_count: int                 # explicit copies into host kinds
+    init_dev_bytes: int            # device-materialized zeros at init
+
+    @property
+    def total_bytes(self) -> int:
+        return self.m_bytes + self.v_bytes
+
+    @property
+    def host_bytes(self) -> int:
+        """Bytes resident in host memory between steps."""
+        return self.total_bytes if self.offloaded else 0
+
+    @property
+    def dev_resident_bytes(self) -> int:
+        """Bytes resident in device memory through the whole step."""
+        return 0 if self.offloaded else self.total_bytes
+
+    @property
+    def dev_peak_bytes(self) -> int:
+        """Device-memory contribution at the step peak: the full set when
+        moments live on device; the per-leaf staging pair when offloaded
+        (the one-H2D-per-leaf contract bounds what the update stages —
+        actual concurrency is the hardware scheduler's, DESIGN.md §11)."""
+        return self.max_pair_bytes if self.offloaded else self.total_bytes
+
+
+# ---------------------------------------------------------------------------
 # The ledger
 # ---------------------------------------------------------------------------
 
@@ -160,6 +291,8 @@ class MemLedger:
     runtime_events: List[Tuple[str, int, float]] = field(default_factory=list)
     exposed_transfer_s: Optional[float] = None  # offload-on minus offload-off
     step_time_s: Optional[float] = None
+    moments: Optional[MomentChannel] = None     # opt-state channel (§11)
+    opt_time_s: Optional[float] = None          # measured update wall time
 
     # -- runtime channel ----------------------------------------------------
     def record_runtime(self, phase: str, tick: int) -> None:
@@ -214,24 +347,44 @@ class MemLedger:
         """Total bytes placed in host memory across the forward."""
         return sum(r.off_bytes for r in self.ticks)
 
-    def runtime_coverage_ok(self, *, require_bwd: bool = True) -> bool:
+    @property
+    def combined_peak_bytes(self) -> int:
+        """Device peak with the optimizer-state term folded in: the §5.2
+        activation peak plus the moments' device contribution (full set
+        when device-resident; the per-leaf staging pair when offloaded).
+        Equals ``peak_bytes`` when no moments channel was measured."""
+        mom = self.moments.dev_peak_bytes if self.moments else 0
+        return self.peak_bytes + mom
+
+    def runtime_coverage_ok(self, *, require_bwd: bool = True,
+                            require_update: Optional[bool] = None) -> bool:
         """Every tick produced forward (and backward) probe samples — the
-        evidence that each tick's fwd and bwd actually executed.  Exact
-        cross-tick ordering is deliberately NOT asserted: the probes are
-        unordered host callbacks and may drain late relative to the XLA
-        schedule (DESIGN.md §10)."""
-        return all(r.fwd_t is not None for r in self.ticks) and (
+        evidence that each tick's fwd and bwd actually executed — and,
+        when the moments channel is measured (require_update defaults to
+        that), at least one update-phase probe fired.  Exact cross-tick
+        ordering is deliberately NOT asserted: the probes are unordered
+        host callbacks and may drain late relative to the XLA schedule
+        (DESIGN.md §10)."""
+        if require_update is None:
+            require_update = self.moments is not None
+        ok = all(r.fwd_t is not None for r in self.ticks) and (
             not require_bwd or all(r.bwd_t is not None for r in self.ticks))
+        if require_update:
+            ok = ok and any(p == "upd" for p, _, _ in self.runtime_events)
+        return ok
 
     def to_csv(self, path: str) -> None:
+        mom = self.moments
         with open(path, "w", newline="") as f:
             w = csv.writer(f)
             w.writerow(["tick", "chunk", "valid", "alpha", "mat_bytes",
-                        "off_bytes", "resident_bytes", "fwd_t", "bwd_t"])
+                        "off_bytes", "resident_bytes", "moments_dev_bytes",
+                        "fwd_t", "bwd_t"])
             for r in self.ticks:
                 w.writerow([r.tick, r.chunk, int(r.valid),
                             f"{r.alpha:.4f}", r.mat_bytes, r.off_bytes,
                             r.resident,
+                            "" if mom is None else mom.dev_resident_bytes,
                             "" if r.fwd_t is None else f"{r.fwd_t:.6f}",
                             "" if r.bwd_t is None else f"{r.bwd_t:.6f}"])
             w.writerow([])
@@ -242,6 +395,60 @@ class MemLedger:
             if self.exposed_transfer_s is not None:
                 w.writerow(["exposed_transfer_s",
                             f"{self.exposed_transfer_s:.6f}"])
+            if mom is not None:
+                w.writerow(["moments_offloaded", int(mom.offloaded)])
+                w.writerow(["moments_total_bytes", mom.total_bytes])
+                w.writerow(["moments_host_bytes", mom.host_bytes])
+                w.writerow(["moments_dev_peak_bytes", mom.dev_peak_bytes])
+                w.writerow(["moments_named_bytes", mom.named_bytes])
+                w.writerow(["moments_h2d_per_step", mom.h2d_count])
+                w.writerow(["combined_peak_bytes", self.combined_peak_bytes])
+                if self.opt_time_s is not None:
+                    w.writerow(["opt_time_s", f"{self.opt_time_s:.6f}"])
+
+
+def read_csv(path: str) -> Dict[str, object]:
+    """Round-trip reader for ``MemLedger.to_csv``: returns
+    {"rows": [per-tick dicts], "summary": {key: number}}.  The per-tick
+    section ends at the blank line; summary lines are key/value pairs.
+    Used by the CSV round-trip tests and by offline analysis of the CI
+    memledger artifacts."""
+    rows: List[Dict[str, object]] = []
+    summary: Dict[str, float] = {}
+    with open(path, newline="") as f:
+        r = csv.reader(f)
+        header = next(r)
+        in_rows = True
+        for line in r:
+            if not line:
+                in_rows = False
+                continue
+            if in_rows:
+                row: Dict[str, object] = {}
+                for k, val in zip(header, line):
+                    if val == "":
+                        row[k] = None
+                    elif k == "alpha" or k.endswith("_t"):
+                        row[k] = float(val)
+                    else:
+                        row[k] = int(val)
+                rows.append(row)
+            else:
+                key, val = line[0], line[1]
+                summary[key] = float(val) if "." in val else int(val)
+    return {"rows": rows, "summary": summary}
+
+
+def update_probe(ledger):
+    """Identity hook for ``adamw.apply_update(probe=...)``: fires an
+    unordered host callback when the update phase actually executes — the
+    moments-channel analogue of ``tick_probe``'s fwd/bwd evidence."""
+    def hook(step):
+        if io_callback is not None:
+            io_callback(lambda: ledger.record_runtime("upd", 0), None,
+                        ordered=False)
+        return step
+    return hook
 
 
 # ---------------------------------------------------------------------------
@@ -353,13 +560,106 @@ def predicted_spmd_peak(cell) -> float:
     return peak
 
 
+def predicted_moment_bytes(cell, *, data_size: int) -> Tuple[float, float]:
+    """(total, max_staged_pair) closed-form optimizer-state bytes for the
+    measured step's stacked stage-param tree:
+    ``costmodel.moment_bytes_per_param(opt_dtype)`` over the eval-shape
+    param counts — the analytic side the moments channel is gated
+    against.  Scope matches ``measure``'s subject: the stage-parameter
+    moments (the depth-scaling term); the dp-replicated globals are
+    outside the §5.2 device-budget subject."""
+    import numpy as np
+
+    from repro.core import costmodel as cm
+    from repro.parallel import specs as SP
+
+    st = SP.stage_struct(cell.mdef, cell.plan.pp, data_size, cell.dtype)
+    leaves = [int(np.prod(l.shape)) for l in jax.tree_util.tree_leaves(st)]
+    dt = cell.plan.opt_dtype
+    return cm.opt_state_bytes(sum(leaves), dt), cm.opt_state_bytes(
+        max(leaves), dt)
+
+
+def predicted_combined_peak(cell, *, data_size: int) -> float:
+    """Predicted activations+moments device peak: the §5.2 tick-loop peak
+    plus the moments' device term (full set when device-resident; the
+    per-leaf staging pair when the plan offloads them).  The opt-state
+    memory-gate's analytic side."""
+    total, max_pair = predicted_moment_bytes(cell, data_size=data_size)
+    mom = max_pair if cell.plan.offload_moments else total
+    return predicted_spmd_peak(cell) + mom
+
+
+def _measure_opt(cell, ledger: MemLedger, params, grads) -> None:
+    """Measure the moments channel: trace + execute one real AdamW update
+    over the measured step's stage params/grads with the plan's offload
+    knobs, walk the update jaxpr for the opt_m@/opt_v@ names and the
+    explicit device_put copies, and record update-phase probe evidence."""
+    from repro.optim import adamw
+    from repro.runtime import hostmem
+
+    plan = cell.plan
+    opt_dtype = (jnp.bfloat16 if plan.opt_dtype == "bfloat16"
+                 else jnp.float32)
+    kind = hostmem.host_memory_kind() if plan.offload_moments else None
+    # the grads land committed to the emulated mesh (shard_map outputs);
+    # co-locate the params so the update runs on the same device set, as
+    # the real train_step's optimizer does
+    params = jax.tree_util.tree_map(
+        lambda p, g: jax.device_put(p, g.sharding), params, grads)
+    state = adamw.init_state(params, opt_dtype,
+                             offload_moments=plan.offload_moments)
+    probe = update_probe(ledger)
+
+    def opt_fn(p, g, s):
+        return adamw.apply_update(
+            p, g, s, lr=1e-3, offload_moments=plan.offload_moments,
+            moments_mode=plan.moments_mode, probe=probe)
+
+    cjx = jax.make_jaxpr(opt_fn)(params, grads, state)
+    named = moment_bytes_from_jaxpr(cjx)
+    kinds = device_put_kinds(cjx)
+    leaves_m = jax.tree_util.tree_leaves(state.m)
+    leaves_v = jax.tree_util.tree_leaves(state.v)
+    pairs = [int(m.nbytes) + int(v.nbytes)
+             for m, v in zip(leaves_m, leaves_v)]
+    init_dev = init_moment_device_bytes(
+        params, opt_dtype, offload_moments=plan.offload_moments)
+
+    exe = jax.jit(opt_fn)
+    jax.block_until_ready(exe(params, grads, state))
+    _drain_callbacks()
+    t0 = time.perf_counter()
+    jax.block_until_ready(exe(params, grads, state))
+    ledger.opt_time_s = time.perf_counter() - t0
+    _drain_callbacks()
+
+    ledger.moments = MomentChannel(
+        offloaded=plan.offload_moments,
+        mode=plan.moments_mode,
+        opt_dtype=plan.opt_dtype,
+        host_kind=kind,
+        m_bytes=sum(int(m.nbytes) for m in leaves_m),
+        v_bytes=sum(int(v.nbytes) for v in leaves_v),
+        n_leaves=len(leaves_m),
+        max_pair_bytes=max(pairs) if pairs else 0,
+        named_bytes=named["m"] + named["v"],
+        h2d_count=kinds.get(hostmem.DEVICE_KIND, 0),
+        d2h_count=sum(c for k, c in kinds.items()
+                      if k != hostmem.DEVICE_KIND),
+        init_dev_bytes=init_dev)
+
+
 def measure(cell, *, data_size: int, model_size: int, seed: int = 0,
-            baseline: bool = True) -> MemLedger:
+            baseline: bool = True, opt: bool = False) -> MemLedger:
     """Execute one real train-grad step of `cell` on an emulated mesh with
     the ledger attached, measure the tagged bytes from the traced jaxpr,
     and (optionally) time an offload-off baseline for the exposed-transfer
-    estimate.  Requires grad_accum == 1 (the jaxpr scan walk would otherwise
-    multiply the per-microbatch bytes by the accumulation factor)."""
+    estimate.  With ``opt`` the optimizer update is measured too (the
+    moments channel, §11): one real AdamW step over the measured grads
+    with the plan's ``offload_moments``/``moments_mode``.  Requires
+    grad_accum == 1 (the jaxpr scan walk would otherwise multiply the
+    per-microbatch bytes by the accumulation factor)."""
     import dataclasses
 
     from repro.parallel import runner
@@ -380,12 +680,17 @@ def measure(cell, *, data_size: int, model_size: int, seed: int = 0,
     _drain_callbacks()
     ledger.runtime_events.clear()      # drop compile-run samples
     t0 = time.perf_counter()
-    jax.block_until_ready(exe(*args))
+    step_out = exe(*args)
+    jax.block_until_ready(step_out)
     ledger.step_time_s = time.perf_counter() - t0
     _drain_callbacks()                 # probes may land after the arrays
 
     events = runner.pipeline_feed_events(plan, cell.sched.n)
     ledger.load_tagged(per_suffix, events, plan.pp, cell.alphas)
+
+    # 2b) optimizer-state channel over the measured grads
+    if opt:
+        _measure_opt(cell, ledger, args[0], step_out[1])
 
     # 3) offload-off baseline: the exposed-transfer estimate
     if baseline and plan.offload:

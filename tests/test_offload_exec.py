@@ -193,6 +193,37 @@ def test_sim_predicted_peak_brackets_measured(eight_devices):
     assert ml.predicted_spmd_peak(bf16) == pytest.approx(predicted / 2)
 
 
+@pytest.mark.optstate
+def test_sim_predicted_combined_brackets_measured_with_moments(eight_devices):
+    """The same honesty contract extended to the moments channel
+    (DESIGN.md §11): measured *combined* activations+moments device peak
+    brackets the analytic prediction, moment offload strictly reduces the
+    measured combined peak vs the same cell with device-resident moments,
+    and the ledger's coverage check demands the update-phase probe."""
+    cfg = get_config("qwen2-7b").reduced()
+    mdef = build_model(cfg)
+    cell = _mk_cell(mdef, pp=2)
+    cell = dataclasses.replace(
+        cell, plan=dataclasses.replace(cell.plan, offload_moments=True))
+    led = ml.measure(cell, data_size=4, model_size=2, baseline=False,
+                     opt=True)
+    assert led.moments is not None and led.moments.offloaded
+    assert led.runtime_coverage_ok()      # fwd + bwd + update evidence
+    predicted = ml.predicted_combined_peak(cell, data_size=4)
+    got = led.combined_peak_bytes
+    assert got <= 1.1 * predicted, (got, predicted)
+    assert got >= 0.8 * predicted, (got, predicted)
+    # executed moment offload must pay off against the resident baseline
+    cell_res = dataclasses.replace(
+        cell, plan=dataclasses.replace(cell.plan, offload_moments=False))
+    led_res = ml.measure(cell_res, data_size=4, model_size=2,
+                         baseline=False, opt=True)
+    assert got < led_res.combined_peak_bytes, (
+        got, led_res.combined_peak_bytes)
+    assert led_res.combined_peak_bytes <= 1.1 * ml.predicted_combined_peak(
+        cell_res, data_size=4)
+
+
 # ---------------------------------------------------------------------------
 # decode consumes the plan; offloading a decode step is rejected
 # ---------------------------------------------------------------------------
