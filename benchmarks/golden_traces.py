@@ -42,6 +42,15 @@ CONFIGS = [
      dict(arch="sppo-gpt-7b", reduced=True, seq_len=256, batch=4,
           n_params=None, pp=2, n=4, sp=2, msp=True, msp_split=2,
           offload_moments=True)),
+    # prefetch="sync" lane mode (DESIGN.md §12): the autodiff reload
+    # placement, priced — pins the exposed-H2D gap vs the "ahead" traces
+    ("gpt7b_seq512k_pp4_n8_plain_syncpf",
+     dict(arch="sppo-gpt-7b", seq_len=524288, batch=1,
+          n_params=6_700_000_000, pp=4, n=8, sp=16, msp=False,
+          prefetch="sync")),
+    ("gpt7b_reduced_pp2_syncpf",
+     dict(arch="sppo-gpt-7b", reduced=True, seq_len=256, batch=4,
+          n_params=None, pp=2, n=4, sp=2, msp=False, prefetch="sync")),
 ]
 
 

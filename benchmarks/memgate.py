@@ -24,8 +24,15 @@ activations+moments device peak against ``predicted_combined_peak``, and a
 strict-reduction check — moment offload must measurably lower the combined
 device peak vs the same cell with ``offload_moments=False``.
 
-The per-tick ledger CSVs (including the moments column) land in --out and
-are uploaded as a CI artifact.
+Plain gates run the prefetch ablation (DESIGN.md §12): the same cell is
+re-measured with ``prefetch="sync"`` and the gate fails unless
+``prefetch="ahead"`` leaves the measured §5.2 peak unraised AND strictly
+reduces the priced exposed-H2D (``MemLedger.price_h2d`` over the measured
+bytes and backward windows).
+
+The per-tick ledger CSVs (including the moments and h2d_stall_s columns,
+plus the sync-mode ablation ledgers) land in --out and are uploaded as a
+CI artifact.
 """
 import os
 
@@ -79,6 +86,52 @@ def run_gate(gate: dict):
     else:
         measured, predicted = led.peak_bytes, ml.predicted_spmd_peak(cell)
     return measured, predicted, led, cell
+
+
+def prefetch_ablation_check(gate: dict, cell, led, out_dir: str) -> list:
+    """The prefetch='ahead' seam must *pay off* against the autodiff
+    placement (DESIGN.md §12): on the same cell with prefetch='sync' the
+    measured §5.2 peak may not be lower (ahead never raises the peak — the
+    one-slot staging buffer keeps the residual bytes identical), and the
+    priced exposed-H2D over the measured bytes/windows must be strictly
+    smaller under 'ahead'.  The sync-mode per-tick ledger (with the
+    h2d_stall_s column) lands next to the main CSV in the artifact."""
+    import dataclasses
+
+    failures = []
+    cell_sync = dataclasses.replace(
+        cell, plan=dataclasses.replace(cell.plan, prefetch="sync"))
+    led_sync = ml.measure(cell_sync, data_size=gate["data_size"],
+                          model_size=gate["model_size"], baseline=False)
+    led_sync.to_csv(os.path.join(out_dir,
+                                 f"memledger-{gate['name']}-syncpf.csv"))
+    if led.peak_bytes > led_sync.peak_bytes:
+        failures.append(
+            f"{gate['name']}: prefetch='ahead' raised the measured peak "
+            f"({led.peak_bytes} B vs {led_sync.peak_bytes} B sync) — the "
+            "one-slot staging invariant is broken")
+    ahead_exp = led.h2d_exposed_s or 0.0
+    sync_exp = led_sync.h2d_exposed_s or 0.0
+    if sync_exp > 0.0:
+        if not ahead_exp < sync_exp:
+            failures.append(
+                f"{gate['name']}: prefetch='ahead' exposed H2D "
+                f"({ahead_exp:.3e}s) is not strictly below 'sync' "
+                f"({sync_exp:.3e}s) — the one-chunk-ahead reload is not "
+                "hiding under the next backward")
+    elif any(r.off_bytes for r in led_sync.ticks):
+        failures.append(
+            f"{gate['name']}: sync-mode exposure priced 0 despite "
+            "deployed off-rows — the h2d channel is broken")
+    else:
+        # a gate cell whose alphas quantize to zero rows has nothing to
+        # ablate; the strict comparison would be vacuously unsatisfiable
+        print(f"{gate['name']:32s} prefetch: no off-rows deployed — "
+              "ablation vacuous (check the cell's alphas)")
+    print(f"{gate['name']:32s} prefetch: exposed h2d "
+          f"{ahead_exp:.3e}s ahead vs {sync_exp:.3e}s sync, peak "
+          f"{led.peak_bytes} B vs {led_sync.peak_bytes} B")
+    return failures
 
 
 def moment_reduction_check(gate: dict, cell, led) -> list:
@@ -143,6 +196,10 @@ def main(argv=None):
                             "update phase (the step did not fully execute)")
         if gate.get("offload_moments"):
             failures.extend(moment_reduction_check(gate, cell, led))
+        else:
+            # prefetch ablation on the plain activation cells (§12)
+            failures.extend(prefetch_ablation_check(gate, cell, led,
+                                                    args.out))
         if ratio > gate["max_ratio"]:
             failures.append(
                 f"{name}: measured peak {measured} B exceeds "

@@ -30,7 +30,9 @@ from repro.runtime import memledger as ml
 
 VARIANTS = {
     "sppo_executed": dict(offload=True, remat="sppo",
-                          offload_mode="explicit"),
+                          offload_mode="explicit"),   # prefetch="ahead"
+    "sppo_sync_reload": dict(offload=True, remat="sppo",
+                             offload_mode="explicit", prefetch="sync"),
     "sppo_xla_policy": dict(offload=True, remat="sppo", offload_mode="xla"),
     "no_offload": dict(offload=False, remat="sppo"),
     "full_recompute": dict(offload=False, remat="full"),
@@ -90,6 +92,13 @@ def main(argv=None):
           f"ratio {led.peak_bytes/max(predicted,1):.4f}  "
           f"host bytes {led.host_bytes/2**20:.2f} MiB  "
           f"exposed transfer {exposed*1e3:.1f} ms")
+    # priced exposed-H2D under both reload placements (DESIGN.md §12):
+    # same measured bytes/windows, only the lane rule differs
+    from repro.core import costmodel as cm
+    ahead_exp = led.h2d_exposed_s or 0.0
+    sync_exp = led.price_h2d(bw=cm.V5E.d2h_bw, prefetch="sync")
+    print(f"exposed h2d: {ahead_exp*1e6:.2f} us prefetch=ahead  vs  "
+          f"{sync_exp*1e6:.2f} us prefetch=sync")
 
     # optimizer-state offload (DESIGN.md §11): combined activations+moments
     # device peak, host-resident vs device-resident AdamW moments.  Skipped

@@ -181,6 +181,12 @@ class ParallelPlan:
     # backends without host memory kinds); "xla" delegates placement to the
     # remat offload policy (save_and_offload_only_these_names)
     offload_mode: str = "explicit"
+    # backward-reload placement on the explicit path (DESIGN.md §12):
+    # "ahead" = tick-level custom_vjp seam issuing chunk i's H2D one event
+    # ahead, overlapped with chunk i+1's backward (the simulator's
+    # memory-mirror rule, executed); "sync" = autodiff placement — the
+    # checkpoint remat replays each chunk's reload at its own backward
+    prefetch: str = "ahead"
     msp: bool = False          # multiplexed sequence partitioning (ramp chunks)
     msp_split: int = 2         # sub-chunks per ramp chunk (DESIGN.md §2)
     remat: str = "sppo"        # sppo | full | none
@@ -214,6 +220,8 @@ class ParallelPlan:
             f"msp_split({self.msp_split}) must be >= 2 (sub-chunks per ramp)")
         assert self.offload_mode in ("explicit", "xla"), (
             f"offload_mode({self.offload_mode!r}) must be explicit|xla")
+        assert self.prefetch in ("ahead", "sync"), (
+            f"prefetch({self.prefetch!r}) must be ahead|sync")
         assert self.moments_mode in ("explicit", "xla"), (
             f"moments_mode({self.moments_mode!r}) must be explicit|xla")
 

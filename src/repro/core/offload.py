@@ -26,6 +26,7 @@ from dataclasses import dataclass
 from typing import Optional, Sequence
 
 import jax
+import jax.numpy as jnp
 from jax.ad_checkpoint import checkpoint_name
 
 from repro.runtime import hostmem
@@ -49,13 +50,28 @@ class OffloadPlan:
 def sequence_aware_alphas(act_bytes: Sequence[float],
                           comp_times: Sequence[float],
                           bw_d2h: float,
-                          *, reserve_last: bool = True) -> OffloadPlan:
+                          *, reserve_last: bool = True,
+                          bwd_over_fwd: float = 2.0) -> OffloadPlan:
     """act_bytes[i]: Type-1 activation volume of chunk i;
-    comp_times[i]: compute time of chunk i; bw_d2h: host-link bytes/s.
+    comp_times[i]: *forward* compute time of chunk i; bw_d2h: host-link
+    bytes/s.
 
     α_i = min(1, BW · T_{i+1} / A_i): offload exactly what hides under the
     next chunk's compute.  α of the final chunk is 0 (its backward starts
     immediately — offloading it would only add H2D latency, §5.2).
+
+    With ``reserve_last=False`` the final chunk does offload — a
+    memory-constrained override, not a free lunch: its backward is the
+    *first backward event* and its replay consumes the reloaded rows, so
+    the D2H→H2D round trip serializes onto the critical path (nothing can
+    hide it; the simulator charges it in full under either prefetch lane
+    mode).  The first backward event's duration —
+    ``comp_times[-1] * bwd_over_fwd`` (lumped fwd:bwd split, cf.
+    costmodel.BWD_RATIO) — is therefore used as the *sizing budget*: α is
+    chosen so each direction of the exposed round trip costs at most about
+    one such backward.  The old behavior budgeted by the chunk's own
+    *forward* time, which is already spent when the D2H becomes
+    schedulable and mis-sizes the bound by the bwd/fwd ratio.
     """
     n = len(act_bytes)
     alphas = []
@@ -63,7 +79,8 @@ def sequence_aware_alphas(act_bytes: Sequence[float],
         if i == n - 1 and reserve_last:
             alphas.append(0.0)
             continue
-        window = comp_times[i + 1] if i + 1 < n else comp_times[i]
+        window = (comp_times[i + 1] if i + 1 < n
+                  else comp_times[i] * bwd_over_fwd)
         alphas.append(max(0.0, min(1.0, bw_d2h * window / max(act_bytes[i], 1e-9))))
     m_thr = max((a * b for a, b in zip(alphas, act_bytes)), default=0.0)
     peak = peak_memory(act_bytes, alphas)
@@ -113,12 +130,28 @@ def sppo_policy(offload: bool = True,
 
 
 def split_rows(rows: int, alpha: float) -> int:
-    """Rows routed off-device for a fractional α (make_tag's split point)."""
+    """Rows routed off-device for a fractional α (the tags' split point).
+
+    Nearest-row rounding, clipped to [0, rows].  The old ``max(1, ...)``
+    floor forced at least one row off-device for *any* α > 0, so on short
+    chunks the measured off-bytes exceeded the continuous α·A the ledger
+    and simulator predict; predictions now share this discretization via
+    ``quantized_alpha`` so the memgate band cannot drift at small shapes."""
     if alpha <= 0.0:
         return 0
     if alpha >= 1.0:
         return rows
-    return max(1, min(rows - 1, int(round(rows * alpha))))
+    return max(0, min(rows, int(round(rows * alpha))))
+
+
+def quantized_alpha(rows: int, alpha: float) -> float:
+    """The offload ratio the row split actually deploys for a tensor with
+    `rows` rows: ``split_rows(rows, α) / rows``.  Ledger/simulator
+    predictions use this discretized ratio (runtime/memledger.py) so the
+    analytic side matches the executed split exactly."""
+    if rows <= 0:
+        return 0.0
+    return split_rows(rows, float(alpha)) / rows
 
 
 def chunk_names(suffix: str = "") -> tuple:
@@ -147,6 +180,10 @@ def make_tag(alpha: float, *, axis: int = 1,
         if alpha >= 1.0:
             return checkpoint_name(t, off_name)
         k = split_rows(t.shape[axis], alpha)
+        if k <= 0:                       # α quantizes to 0 rows on this shape
+            return checkpoint_name(t, keep_name)
+        if k >= t.shape[axis]:           # ... or to all rows
+            return checkpoint_name(t, off_name)
         lo = jax.lax.slice_in_dim(t, 0, k, axis=axis)
         hi = jax.lax.slice_in_dim(t, k, t.shape[axis], axis=axis)
         lo = checkpoint_name(lo, off_name)
@@ -218,10 +255,109 @@ def make_exec_tag(alpha: float, *, axis: int = 1,
         if alpha >= 1.0:
             return host_round_trip(t, host_kind=host_kind, name=off_name)
         k = split_rows(t.shape[axis], alpha)
+        if k <= 0:
+            return checkpoint_name(t, keep_name)
+        if k >= t.shape[axis]:
+            return host_round_trip(t, host_kind=host_kind, name=off_name)
         lo = jax.lax.slice_in_dim(t, 0, k, axis=axis)
         hi = jax.lax.slice_in_dim(t, k, t.shape[axis], axis=axis)
         lo = host_round_trip(lo, host_kind=host_kind, name=off_name)
         hi = checkpoint_name(hi, keep_name)
+        return jax.lax.concatenate([lo, hi], dimension=axis)
+
+    return tag
+
+
+# ---------------------------------------------------------------------------
+# 4. Prefetch="ahead" tag machinery (DESIGN.md §12)
+# ---------------------------------------------------------------------------
+#
+# The executed path above leaves the backward H2D to autodiff: the remat of
+# chunk i replays its reload exactly at chunk i's backward.  The "ahead"
+# path moves residual management to a tick-level custom_vjp seam
+# (parallel/runner.py: prefetch_chunk): the seam's *forward* runs the chunk
+# with a capture tag — a dataflow identity that records the (off, keep) row
+# split of every tagged tensor — and routes the off rows to host once, as
+# the seam's explicit residual; the hand-written backward reloads chunk
+# i's rows one event ahead (during chunk i+1's backward) and replays the
+# chunk with an inject tag that substitutes the staged copies for the
+# recomputed tensors.  ``residual_substitute`` is the gradient seam of that
+# substitution: primal = the staged copy (bitwise equal — D2H/H2D round
+# trips copy), cotangent routed entirely to the computed branch, so the
+# replay differentiates the true producers while XLA can drop their
+# forward values.
+
+
+@jax.custom_vjp
+def residual_substitute(computed, staged):
+    """Identity-by-value swap: use `staged` (a reloaded residual, bitwise
+    equal to `computed`) as the primal, route the cotangent to `computed`'s
+    producers — exactly what saving `computed` under a checkpoint policy
+    would do, with the residual's placement under caller control."""
+    return staged
+
+
+def _subst_fwd(computed, staged):
+    return staged, None
+
+
+def _subst_bwd(_, ct):
+    return ct, jnp.zeros_like(ct)
+
+
+residual_substitute.defvjp(_subst_fwd, _subst_bwd)
+
+
+def make_capture_tag(alpha: float, collector: list, *, axis: int = 1):
+    """Prefetch-'ahead' forward tag: a dataflow identity that appends the
+    (kind, tensor) row split of every tagged tensor to `collector` in
+    traversal order — "off" rows destined for host, "keep" rows staying on
+    device.  The seam (runner.prefetch_chunk) stacks them over slots and
+    performs the single D2H per site."""
+    alpha = float(alpha)
+
+    def tag(t):
+        rows = t.shape[axis]
+        k = split_rows(rows, alpha)
+        if k <= 0:
+            collector.append(("keep", t))
+            return t
+        if k >= rows:
+            collector.append(("off", t))
+            return t
+        collector.append(("off", jax.lax.slice_in_dim(t, 0, k, axis=axis)))
+        collector.append(("keep", jax.lax.slice_in_dim(t, k, rows, axis=axis)))
+        return t
+
+    return tag
+
+
+def make_inject_tag(alpha: float, off_acts, keep_acts, *, axis: int = 1,
+                    names: tuple = (OFF_NAME, KEEP_NAME)):
+    """Prefetch-'ahead' backward-replay tag: re-walks the same tag sites as
+    ``make_capture_tag`` (same α ⇒ same split decisions ⇒ same traversal
+    order) and substitutes the staged residuals — `off_acts` reloaded one
+    event ahead by the seam, `keep_acts` passed through on device — via
+    ``residual_substitute``.  Substituted values carry the checkpoint names
+    so the per-slot ``save_only_these_names`` replay saves exactly them."""
+    alpha = float(alpha)
+    off_it = iter(off_acts)
+    keep_it = iter(keep_acts)
+    off_name, keep_name = names
+
+    def tag(t):
+        rows = t.shape[axis]
+        k = split_rows(rows, alpha)
+        if k <= 0:
+            return checkpoint_name(
+                residual_substitute(t, next(keep_it)), keep_name)
+        if k >= rows:
+            return checkpoint_name(
+                residual_substitute(t, next(off_it)), off_name)
+        lo = jax.lax.slice_in_dim(t, 0, k, axis=axis)
+        hi = jax.lax.slice_in_dim(t, k, rows, axis=axis)
+        lo = checkpoint_name(residual_substitute(lo, next(off_it)), off_name)
+        hi = checkpoint_name(residual_substitute(hi, next(keep_it)), keep_name)
         return jax.lax.concatenate([lo, hi], dimension=axis)
 
     return tag

@@ -98,7 +98,8 @@ def simulate(events: Sequence[Tuple[int, int, int]],
              h2d_bw: Optional[float] = None,
              p2p_bytes: Optional[Sequence[float]] = None,
              ici_bw: Optional[float] = None,
-             bwd_ratio: float = 2.0) -> SimResult:
+             bwd_ratio: float = 2.0,
+             prefetch: str = "ahead") -> SimResult:
     """Play `events` through a pp-stage pipeline.
 
     events: (chunk, sub, n_sub) feed order for stage 0 (see
@@ -112,11 +113,17 @@ def simulate(events: Sequence[Tuple[int, int, int]],
         lane (omit for free hand-offs).
     bwd_ratio: backward/forward cost split of the lumped chunk cost
         (2.0 = the standard 2x-fwd backward; 0.0 = forward-only playout).
+    prefetch: H2D reload placement, mirroring ``ParallelPlan.prefetch``
+        (DESIGN.md §12) — "ahead": the memory-mirror rule, reload of event
+        e issued at the backward *start* of event e+1, hidden under its
+        compute; "sync": autodiff placement, reload of event e issued only
+        when e's own backward is ready, fully exposed on the critical path.
 
     Forward runs events in feed order, backward in reverse (the runner
     differentiates an unrolled forward loop, so each stage finishes all
     forward work before its first backward — DESIGN.md §3).
     """
+    assert prefetch in ("ahead", "sync"), prefetch
     events = list(events)
     ne = len(events)
     if ne == 0 or pp < 1:
@@ -199,24 +206,42 @@ def simulate(events: Sequence[Tuple[int, int, int]],
         for s in range(pp - 1, -1, -1):
             comp_free = fwd_end[s][ne - 1]          # all fwd first, then bwd
             p2p_free = 0.0
-            h2d_free = fwd_end[s][ne - 1]
+            # the reload lane opens at the stage's first-*backward*
+            # readiness, not its last forward: the runner's drain hand-off
+            # (link_drain) issues the first H2D with the first cotangent,
+            # which on stages < pp−1 arrives only after the downstream
+            # backward + hand-off (barrive).  The old fwd_end init let
+            # upstream stages pre-load during their drain bubble — a
+            # placement the executed program has no dataflow for.
+            bwd_ready0 = fwd_end[s][ne - 1]
+            if s < pp - 1:
+                bwd_ready0 = max(bwd_ready0, barrive[s][ne - 1])
+            h2d_free = bwd_ready0
             h2d_done = [0.0] * ne
-            prev_bwd_start = fwd_end[s][ne - 1]
+            prev_bwd_start = bwd_ready0
             for e in range(ne - 1, -1, -1):
                 c, sub, ns = events[e]
+                up = (fwd_end[s][e] if s == pp - 1 else barrive[s][e])
+                ready = max(comp_free, up)
                 if alphas[c] > 0.0:
-                    # memory-mirror prefetch: reload of event e hides under
-                    # the backward of event e+1 (whose activations are still
-                    # resident), never earlier — keeps the backward peak
-                    # bounded by the forward peak (DESIGN.md §3.2).
-                    h_start = max(h2d_free, d2h_end[s][e], prev_bwd_start)
+                    if prefetch == "ahead":
+                        # memory-mirror prefetch: reload of event e hides
+                        # under the backward of event e+1 (whose activations
+                        # are still resident), never earlier — keeps the
+                        # backward peak bounded by the forward peak
+                        # (DESIGN.md §3.2).
+                        h_start = max(h2d_free, d2h_end[s][e],
+                                      prev_bwd_start)
+                    else:
+                        # sync: autodiff places the reload inside event e's
+                        # own remat replay — it cannot issue before e's
+                        # backward is otherwise ready, and is fully exposed
+                        h_start = max(h2d_free, d2h_end[s][e], ready)
                     h_end = h_start + rld_t[e]
                     h2d_free = h_end
                     h2d_done[e] = h_end
                     trace.append(LaneEvent(s, H2D, c, sub, ns, h_start, h_end))
                     mem[s].append((h_end, 1, alphas[c] * acts[c] / ns, 1))
-                up = (fwd_end[s][e] if s == pp - 1 else barrive[s][e])
-                ready = max(comp_free, up)
                 if alphas[c] > 0.0 and h2d_done[e] > ready:
                     h2d_stall += h2d_done[e] - ready
                 start = max(ready, h2d_done[e])

@@ -45,13 +45,14 @@ def iteration_time(cfg, seq_len: int, batch: int, n_params: int,
                    msp_split: int = 2,
                    offload: bool = True,
                    offload_moments: bool = False,
-                   opt_dtype: str = "float32") -> Tuple[float, tuple]:
+                   opt_dtype: str = "float32",
+                   prefetch: str = "ahead") -> Tuple[float, tuple]:
     """Simulated per-iteration wall time for one dp replica (seconds)."""
     t, alphas, _ = simulate_candidate(cfg, seq_len, batch, n_params, pp, n,
                                       sp, hw, msp=msp, msp_split=msp_split,
                                       offload=offload,
                                       offload_moments=offload_moments,
-                                      opt_dtype=opt_dtype)
+                                      opt_dtype=opt_dtype, prefetch=prefetch)
     return t, alphas
 
 
@@ -60,14 +61,18 @@ def simulate_candidate(cfg, seq_len: int, batch: int, n_params: int,
                        hw: cm.Hardware = cm.V5E, *, msp: bool = False,
                        msp_split: int = 2, offload: bool = True,
                        offload_moments: bool = False,
-                       opt_dtype: str = "float32"
+                       opt_dtype: str = "float32",
+                       prefetch: str = "ahead"
                        ) -> Tuple[float, tuple, sim.SimResult]:
     """Build the candidate's cost/activation profile and play it out.
 
     offload_moments adds the optimizer-state epilogue (DESIGN.md §11): the
     per-device moment set crosses the host link once in each direction per
     step, after the last backward — nothing left to hide it under, so it is
-    charged in full on top of the pipeline playout."""
+    charged in full on top of the pipeline playout.  prefetch selects the
+    simulator's H2D lane mode (DESIGN.md §12): "ahead" prices the
+    one-chunk-ahead reload seam, "sync" the autodiff placement — both
+    plan settings therefore have priced predictions."""
     r = part.flops_per_token_ratio(cfg)
     sched = part.partition(seq_len, n, cfg, "length")
     costs = part.chunk_costs(sched, r)
@@ -102,7 +107,7 @@ def simulate_candidate(cfg, seq_len: int, batch: int, n_params: int,
         times, pp=pp, msp=msp, split=msp_split,
         chunk_acts=act, alphas=alphas,
         d2h_bw=hw.d2h_bw, p2p_bytes=p2p, ici_bw=hw.ici_bw,
-        bwd_ratio=bwd_ratio)
+        bwd_ratio=bwd_ratio, prefetch=prefetch)
     total = res.total
     if offload_moments:
         total += sim.opt_update_transfer(

@@ -152,7 +152,9 @@ def run_cell(arch: str, shape_name: str, mesh, *, verbose=True):
            "plan": {"dp": cell.plan.dp, "pp": cell.plan.pp,
                     "sp": cell.plan.sp, "n_chunks": cell.sched.n,
                     "grad_accum": cell.plan.grad_accum,
-                    "offload": cell.plan.offload},
+                    "offload": cell.plan.offload,
+                    "offload_mode": cell.plan.offload_mode,
+                    "prefetch": cell.plan.prefetch},
            "alphas": list(cell.alphas)}
     donate = (0, 1) if kind == "train" else ((1,) if kind == "decode" else ())
     try:

@@ -72,6 +72,12 @@ def main(argv=None):
                     help="explicit: one H2D/D2H device_put per moment leaf "
                          "in the update; xla: host-committed shardings, "
                          "streaming delegated to XLA")
+    ap.add_argument("--prefetch", default=None, choices=["ahead", "sync"],
+                    help="backward-reload placement on the explicit offload "
+                         "path (DESIGN.md §12): ahead = one-chunk-ahead H2D "
+                         "via the tick-level custom_vjp seam (default); "
+                         "sync = autodiff placement, each chunk reloads at "
+                         "its own backward")
     ap.add_argument("--msp", action="store_true",
                     help="multiplexed sequence partitioning (pp > 1 only). "
                          "NOTE: on the lock-step SPMD runner the ramp "
@@ -109,6 +115,8 @@ def main(argv=None):
         overrides["offload_moments"] = True
     if args.moments_mode:
         overrides["moments_mode"] = args.moments_mode
+    if args.prefetch:
+        overrides["prefetch"] = args.prefetch
     if args.msp:
         overrides["msp"] = True
         overrides["msp_split"] = args.msp_split

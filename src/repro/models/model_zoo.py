@@ -541,17 +541,35 @@ class ModelDef:
                                           dtype, p_full, context))
         return jax.tree_util.tree_map(lambda *a: jnp.stack(a), *states)
 
+    def _extras(self, g, ctx):
+        if not self.cfg.shared_attn_every:
+            return None
+        shared_spec = {"ln1": _norm_spec(self.cfg), "ln2": _norm_spec(self.cfg),
+                       "attn": _attn_spec(self.cfg), "mlp": _mlp_spec(self.cfg)}
+        return {"shared": T.gather_params(g["shared"], shared_spec, ctx)}
+
     def stage_apply(self, stage_params, state, x, ctx, meta, g, *,
                     offload=True, remat="sppo", offload_mode="explicit"):
-        extras = None
-        if self.cfg.shared_attn_every:
-            shared_spec = {"ln1": _norm_spec(self.cfg), "ln2": _norm_spec(self.cfg),
-                           "attn": _attn_spec(self.cfg), "mlp": _mlp_spec(self.cfg)}
-            extras = {"shared": T.gather_params(g["shared"], shared_spec, ctx)}
         return T.stage_apply(self.cfg, self.cfg.family, stage_params,
                              self.stage_spec(), state, x, ctx, meta,
-                             extras, offload=offload, remat=remat,
-                             offload_mode=offload_mode)
+                             self._extras(g, ctx), offload=offload,
+                             remat=remat, offload_mode=offload_mode)
+
+    def stage_apply_capture(self, stage_params, state, x, ctx, meta, g, *,
+                            alpha: float):
+        """Prefetch-'ahead' forward (DESIGN.md §12): returns the stage
+        output plus the captured (off, keep) residual sets."""
+        return T.stage_apply_capture(self.cfg, self.cfg.family, stage_params,
+                                     self.stage_spec(), state, x, ctx, meta,
+                                     alpha, self._extras(g, ctx))
+
+    def stage_apply_inject(self, stage_params, state, x, ctx, meta, g, *,
+                           alpha: float, off_acts, keep_acts):
+        """Prefetch-'ahead' backward replay over staged residuals."""
+        return T.stage_apply_inject(self.cfg, self.cfg.family, stage_params,
+                                    self.stage_spec(), state, x, ctx, meta,
+                                    alpha, off_acts, keep_acts,
+                                    self._extras(g, ctx))
 
 
 def build_model(name_or_cfg) -> ModelDef:

@@ -283,3 +283,65 @@ def stage_apply(cfg, family: str, stage_params, shard_dims, state, x, ctx: Ctx,
 
     x, (state_new, auxs) = jax.lax.scan(body, x, (stage_params, state))
     return x, state_new, jnp.sum(auxs)
+
+
+def stage_apply_capture(cfg, family: str, stage_params, shard_dims, state, x,
+                        ctx: Ctx, meta: ChunkMeta, alpha: float, extras=None):
+    """Prefetch-'ahead' forward of one stage (DESIGN.md §12): the slot scan
+    runs *unwrapped* — the tick-level custom_vjp seam above discards every
+    intermediate, so per-slot checkpointing is moot — with a capture tag
+    collecting the (off, keep) row split of each tagged tensor as extra
+    scan outputs, stacked over the slot dim.
+
+    Returns (x, state', aux_sum, off_acts, keep_acts) where off_acts /
+    keep_acts are tuples of [n_slots, ...] arrays in tag-traversal order —
+    the residual sets whose placement the seam owns."""
+    slot = SLOT_FNS[family]
+
+    def body(carry, ps):
+        xx = carry
+        p_slot, s_slot = ps
+        collector: list = []
+        meta_c = meta._replace(
+            tag=offload_mod.make_capture_tag(alpha, collector))
+        p_full = gather_params(p_slot, shard_dims, ctx)
+        xx, s_new, aux = slot(cfg, p_full, s_slot, xx, ctx, meta_c, extras)
+        off = tuple(t for k, t in collector if k == "off")
+        keep = tuple(t for k, t in collector if k == "keep")
+        return xx, (s_new, aux, off, keep)
+
+    x, (state_new, auxs, off_acts, keep_acts) = jax.lax.scan(
+        body, x, (stage_params, state))
+    return x, state_new, jnp.sum(auxs), off_acts, keep_acts
+
+
+def stage_apply_inject(cfg, family: str, stage_params, shard_dims, state, x,
+                       ctx: Ctx, meta: ChunkMeta, alpha: float,
+                       off_acts, keep_acts, extras=None):
+    """Prefetch-'ahead' backward replay of one stage: the same slot scan,
+    consuming the staged residuals (off rows reloaded one event ahead by
+    the seam, keep rows passed through on device) as per-slot scan inputs;
+    the inject tag substitutes them at the original tag sites.  Each slot
+    runs under ``save_only_these_names`` so the replay's own residual set
+    is exactly the substituted values — no second materialization."""
+    slot = SLOT_FNS[family]
+
+    def body(carry, ps):
+        xx = carry
+        p_slot, s_slot, off_slot, keep_slot = ps
+
+        def inner(p_l, s_l, x_l, off_l, keep_l):
+            p_full = gather_params(p_l, shard_dims, ctx)
+            meta_i = meta._replace(tag=offload_mod.make_inject_tag(
+                alpha, off_l, keep_l, names=meta.names))
+            return slot(cfg, p_full, s_l, x_l, ctx, meta_i, extras)
+
+        fn = jax.checkpoint(
+            inner, policy=jax.checkpoint_policies.save_only_these_names(
+                *meta.names))
+        xx, s_new, aux = fn(p_slot, s_slot, xx, off_slot, keep_slot)
+        return xx, (s_new, aux)
+
+    x, (state_new, auxs) = jax.lax.scan(
+        body, x, (stage_params, state, off_acts, keep_acts))
+    return x, state_new, jnp.sum(auxs)

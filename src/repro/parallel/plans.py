@@ -88,6 +88,10 @@ def resolve_plan(cfg: ModelConfig, shape: ShapeConfig, *, data_size: int = 16,
         n_chunks=n,
         partition="flops" if pp == 1 else "length",
         offload=shape.kind != "decode",
+        # one-chunk-ahead backward reload on the trained explicit path
+        # (DESIGN.md §12); prefill/decode have no backward, so the seam
+        # would be dead structure — they keep the autodiff placement
+        prefetch="ahead" if shape.kind == "train" else "sync",
         msp=False,
         remat="sppo" if shape.kind == "train" else "none",
         zero1=pods > 1,

@@ -24,6 +24,7 @@ from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
+from jax.ad_checkpoint import checkpoint_name
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ModelConfig, ParallelPlan, ShapeConfig
@@ -186,6 +187,114 @@ def chunk_tag(cell: Cell, chunk: int, *, suffix: str, train: bool):
     return ofl.make_tag(alpha, names=names), names
 
 
+def use_ahead_prefetch(plan: ParallelPlan, *, train: bool) -> bool:
+    """Whether a loop iteration goes through the prefetch='ahead' seam
+    (DESIGN.md §12): only the differentiated explicit-offload path has a
+    backward reload to place — prefill/decode and the remat ablations keep
+    their existing structure."""
+    return (train and plan.offload and plan.offload_mode == "explicit"
+            and plan.remat == "sppo" and plan.prefetch == "ahead")
+
+
+def prefetch_chunk(cell: Cell, ctx: Ctx, *, alpha: float, names: tuple,
+                   q_pos, cache_off, kv_view: int):
+    """The prefetch='ahead' seam for one tick/chunk (DESIGN.md §12).
+
+    Returns ``run(stage_p, g, state, x, link_in) -> (y, state', aux,
+    link_out)`` — a ``jax.custom_vjp`` above the per-slot ``jax.checkpoint``:
+
+    * **forward** runs the chunk with the capture tag and saves the
+      *host-resident* off-row residuals (one D2H per tag site over the
+      slot-stacked rows, carrying the tick-qualified ``act_off`` name the
+      memledger counts) plus the device-resident keep rows.  The host set
+      is returned as ``link_out`` — a handle threaded to the *next*
+      chunk's seam, never consumed by forward math.
+    * **backward** receives its own staged reloads as the cotangent of
+      ``link_out`` (issued by the next chunk's backward, i.e. one event
+      ahead), issues the H2D for the *previous* chunk's ``link_in`` — a
+      dataflow-independent copy XLA can overlap with this chunk's backward
+      compute — and replays the chunk through the inject tag over the
+      staged residuals.  The single in-flight link cotangent is the
+      one-slot staging buffer that keeps the backward peak bounded by the
+      forward peak (the simulator's memory-mirror rule, §3.2)."""
+    from repro.runtime import hostmem
+
+    mdef = cell.mdef
+    off_name, keep_name = names
+    kind = hostmem.resolve_host_kind("auto")
+    meta = ChunkMeta(q_pos=q_pos, cache_off=cache_off, kv_view=kv_view,
+                     tag=None, names=names)
+
+    def capture(stage_p, g, state, x):
+        y, s2, aux, off_acts, keep_acts = mdef.stage_apply_capture(
+            stage_p, state, x, ctx, meta, g, alpha=alpha)
+        off_host = tuple(
+            checkpoint_name(hostmem.to_host(t, kind), off_name)
+            for t in off_acts)
+        keep_dev = tuple(checkpoint_name(t, keep_name) for t in keep_acts)
+        return y, s2, aux, off_host, keep_dev
+
+    @jax.custom_vjp
+    def run(stage_p, g, state, x, link_in):
+        y, s2, aux, off_host, _ = capture(stage_p, g, state, x)
+        return y, s2, aux, off_host
+
+    def run_fwd(stage_p, g, state, x, link_in):
+        y, s2, aux, off_host, keep_dev = capture(stage_p, g, state, x)
+        return ((y, s2, aux, off_host),
+                (stage_p, g, state, x, link_in, keep_dev))
+
+    def run_bwd(res, cts):
+        stage_p, g, state, x, link_in, keep_dev = res
+        ct_y, ct_s2, ct_aux, staged_off = cts
+        # one-chunk-ahead H2D: reload the *previous* chunk's host residuals
+        # now; the copy has no data dependency on this chunk's backward
+        # compute below, so it overlaps it, and the result rides the link
+        # cotangent to the previous chunk's seam.
+        staged_prev = jax.tree_util.tree_map(
+            lambda t: hostmem.to_device(t, kind), link_in)
+
+        def replay(stage_p, g, state, x):
+            return mdef.stage_apply_inject(
+                stage_p, state, x, ctx, meta, g, alpha=alpha,
+                off_acts=staged_off, keep_acts=keep_dev)
+
+        _, vjp = jax.vjp(replay, stage_p, g, state, x)
+        gp, gg, gs, gx = vjp((ct_y, ct_s2, ct_aux))
+        return gp, gg, gs, gx, staged_prev
+
+    run.defvjp(run_fwd, run_bwd)
+    return run
+
+
+def link_drain(y, link):
+    """Terminal consumer of the last chunk's link: identity on `y`, with a
+    hand-written backward that issues the final (first-to-run) H2D as soon
+    as the backward pass reaches `y`'s cotangent — the seam's hand-off for
+    the chunk with no later backward to hide under (why reserve_last pins
+    its α to 0, core/offload.py)."""
+    if not link:
+        return y
+    from repro.runtime import hostmem
+
+    kind = hostmem.resolve_host_kind("auto")
+
+    @jax.custom_vjp
+    def attach(y, link):
+        return y
+
+    def attach_fwd(y, link):
+        return y, link
+
+    def attach_bwd(link_res, ct_y):
+        staged = jax.tree_util.tree_map(
+            lambda t: hostmem.to_device(t, kind), link_res)
+        return ct_y, staged
+
+    attach.defvjp(attach_fwd, attach_bwd)
+    return attach(y, link)
+
+
 def pipeline_feed_events(plan: ParallelPlan, n_chunks: int):
     """The (chunk, sub, n_sub) feed sequence the pp>1 tick loop executes.
 
@@ -246,21 +355,30 @@ def run_pipeline(cell: Cell, ctx: Ctx, stage_p, g, tokens, labels, context,
 
     if pp == 1:
         x_last = None
+        ahead = use_ahead_prefetch(plan, train=with_loss)
+        link = ()
         for c in range(N):
             off, ln = cell.sched.offsets[c], cell.sched.lengths[c]
             lloc = ln // sp
             ids = jax.lax.slice_in_dim(tokens, off, off + ln, axis=1)
             q_pos = chunk_positions(off, lloc)
             x = mdef.embed(g, ids, q_pos, ctx)
-            tag, names = chunk_tag(cell, c, suffix=f"@c{c}",
-                                   train=with_loss)
-            meta = ChunkMeta(q_pos=q_pos, cache_off=off // sp,
-                             kv_view=(off + ln) // sp,
-                             tag=tag, names=names)
-            x, state, aux = mdef.stage_apply(
-                stage_p, state, x, ctx, meta, g,
-                offload=plan.offload, remat=plan.remat,
-                offload_mode=plan.offload_mode)
+            if ahead:
+                run = prefetch_chunk(cell, ctx, alpha=cell.alphas[c],
+                                     names=ofl.chunk_names(f"@c{c}"),
+                                     q_pos=q_pos, cache_off=off // sp,
+                                     kv_view=(off + ln) // sp)
+                x, state, aux, link = run(stage_p, g, state, x, link)
+            else:
+                tag, names = chunk_tag(cell, c, suffix=f"@c{c}",
+                                       train=with_loss)
+                meta = ChunkMeta(q_pos=q_pos, cache_off=off // sp,
+                                 kv_view=(off + ln) // sp,
+                                 tag=tag, names=names)
+                x, state, aux = mdef.stage_apply(
+                    stage_p, state, x, ctx, meta, g,
+                    offload=plan.offload, remat=plan.remat,
+                    offload_mode=plan.offload_mode)
             if ledger is not None:
                 from repro.runtime import memledger as _ml
                 x = _ml.tick_probe(x, ledger, c)
@@ -271,6 +389,7 @@ def run_pipeline(cell: Cell, ctx: Ctx, stage_p, g, tokens, labels, context,
                                          jnp.ones_like(lab, jnp.float32), ctx)
                 loss_acc, den_acc = loss_acc + ls, den_acc + cnt
             x_last = x
+        loss_acc = link_drain(loss_acc, link)
         return dict(loss=loss_acc, denom=den_acc, aux=aux_acc, state=state,
                     last_x=x_last)
 
@@ -290,6 +409,8 @@ def run_pipeline(cell: Cell, ctx: Ctx, stage_p, g, tokens, labels, context,
     inv_ns = jnp.array([1.0 / ev[2] for ev in events], jnp.float32)
     carry = jnp.zeros((B, lloc, d), cell.dtype)
     x_out = carry
+    ahead = use_ahead_prefetch(plan, train=with_loss)
+    link = ()
     for t in range(E + pp - 1):
         e_new = min(t, E - 1)
         if t < E:
@@ -306,15 +427,22 @@ def run_pipeline(cell: Cell, ctx: Ctx, stage_p, g, tokens, labels, context,
         q_pos = chunk_positions(off_my, lloc)
         # tick-aligned offload ratio: the SPMD program is uniform across
         # stages, so every stage tags with the fed event's deployed alpha
-        tag, names = chunk_tag(cell, events[e_new][0], suffix=f"@t{t}",
-                               train=with_loss)
-        meta = ChunkMeta(q_pos=q_pos, cache_off=c_my * lloc,
-                         kv_view=min(events[e_new][0] + 1, N) * lloc,
-                         tag=tag, names=names)
-        x_out, state, aux = mdef.stage_apply(
-            stage_p, state, h, ctx, meta, g,
-            offload=plan.offload, remat=plan.remat,
-            offload_mode=plan.offload_mode)
+        if ahead:
+            run = prefetch_chunk(cell, ctx, alpha=cell.alphas[events[e_new][0]],
+                                 names=ofl.chunk_names(f"@t{t}"),
+                                 q_pos=q_pos, cache_off=c_my * lloc,
+                                 kv_view=min(events[e_new][0] + 1, N) * lloc)
+            x_out, state, aux, link = run(stage_p, g, state, h, link)
+        else:
+            tag, names = chunk_tag(cell, events[e_new][0], suffix=f"@t{t}",
+                                   train=with_loss)
+            meta = ChunkMeta(q_pos=q_pos, cache_off=c_my * lloc,
+                             kv_view=min(events[e_new][0] + 1, N) * lloc,
+                             tag=tag, names=names)
+            x_out, state, aux = mdef.stage_apply(
+                stage_p, state, h, ctx, meta, g,
+                offload=plan.offload, remat=plan.remat,
+                offload_mode=plan.offload_mode)
         if ledger is not None:
             from repro.runtime import memledger as _ml
             x_out = _ml.tick_probe(x_out, ledger, t)
@@ -337,6 +465,9 @@ def run_pipeline(cell: Cell, ctx: Ctx, stage_p, g, tokens, labels, context,
             loss_acc = loss_acc + is_last * ls
             den_acc = den_acc + is_last * cnt
         carry = ctx.ppermute_stage(x_out, ctx.next_stage_perm())
+    # the final tick's link drains at backward start; SPMD: every stage
+    # attaches its own last-tick residuals to its (psum-connected) loss term
+    loss_acc = link_drain(loss_acc, link)
     return dict(loss=loss_acc, denom=den_acc, aux=aux_acc, state=state,
                 last_x=x_out)
 

@@ -32,12 +32,22 @@ Measurement channels, all taken from the *real* program:
    the cost model's closed form (``costmodel.moment_bytes_per_param``) and
    the one-H2D-per-leaf contract (tests/test_opt_offload.py).
 
+4. **H2D channel** (PR 5, DESIGN.md §12) — ``price_h2d`` replays the
+   backward reload lane over the measured per-tick off-bytes and the
+   measured backward windows (bwd probe wall clocks), under the plan's
+   ``prefetch`` placement: "ahead" exposes only the reload time that
+   overflows the next tick's backward window, "sync" (autodiff placement)
+   exposes every reload in full.  Per-tick ``h2d_stall_s`` CSV column plus
+   ``h2d_exposed_s``/``prefetch_ahead`` summary rows; the memgate's
+   prefetch ablation gates the strict ahead-vs-sync reduction.
+
 The ledger then replays the §5.2 recurrence M_t = M_{t-1} + A_t −
 α_{t-1}A_{t-1} over the measured per-tick bytes; CI's memory-gate compares
 that measured peak — plus the device-resident moments term — against the
 simulator's prediction from the analytic cost model
-(core/simulate.spmd_tick_peak over costmodel.chunk_act_bytes, plus
-costmodel.moment_bytes_per_param for the opt-state gates).
+(core/simulate.spmd_tick_peak over costmodel.chunk_act_bytes with
+row-quantized alphas, plus costmodel.moment_bytes_per_param for the
+opt-state gates).
 """
 from __future__ import annotations
 
@@ -280,6 +290,7 @@ class TickRow:
     resident: int = 0     # §5.2 recurrence replay, after materialization
     fwd_t: Optional[float] = None   # runtime probe wall-clock (first sample)
     bwd_t: Optional[float] = None
+    h2d_stall_s: Optional[float] = None  # exposed reload time (price_h2d)
 
 
 @dataclass
@@ -293,6 +304,8 @@ class MemLedger:
     step_time_s: Optional[float] = None
     moments: Optional[MomentChannel] = None     # opt-state channel (§11)
     opt_time_s: Optional[float] = None          # measured update wall time
+    prefetch: str = "ahead"                     # plan's reload placement
+    h2d_exposed_s: Optional[float] = None       # Σ per-tick h2d_stall_s
 
     # -- runtime channel ----------------------------------------------------
     def record_runtime(self, phase: str, tick: int) -> None:
@@ -337,6 +350,46 @@ class MemLedger:
             r.fwd_t = firsts.get(("fwd", r.tick))
             r.bwd_t = firsts.get(("bwd", r.tick))
 
+    # -- h2d channel --------------------------------------------------------
+    def price_h2d(self, *, bw: float, prefetch: Optional[str] = None) -> float:
+        """Exposed-H2D replay over the *measured* per-tick bytes and
+        backward windows (DESIGN.md §12): the per-tick reload volume is the
+        ledger's measured ``off_bytes``, the hiding window is the measured
+        backward duration of the next tick (from the bwd probe wall clocks
+        — the backward runs ticks in reverse, so tick t's reload can hide
+        under tick t+1's backward, whose duration is
+        ``bwd_t[t] − bwd_t[t+1]``), and the transfer is priced at `bw`.
+
+        prefetch="ahead" exposes only the part of each reload that does not
+        fit its window; "sync" exposes every reload in full (the autodiff
+        placement serializes it into its own backward).  Passing an
+        explicit `prefetch` prices the counterfactual placement *without*
+        touching the ledger's stored per-tick/summary fields — those always
+        reflect ``self.prefetch``, the mode the step actually ran.  Like
+        the exposed-transfer channel, this is the honest CPU-runnable form
+        of the measurement (§9): bytes and windows are measured, the link
+        bandwidth is the cost model's — real async-copy overlap is a TPU
+        validation item (ROADMAP)."""
+        mode = prefetch if prefetch is not None else self.prefetch
+        rows = self.ticks
+        total = 0.0
+        for i, r in enumerate(rows):
+            rld = r.off_bytes / bw if bw else 0.0
+            if mode == "sync":
+                stall = rld
+            else:
+                window = 0.0
+                if (i + 1 < len(rows) and r.bwd_t is not None
+                        and rows[i + 1].bwd_t is not None):
+                    window = max(0.0, r.bwd_t - rows[i + 1].bwd_t)
+                stall = max(0.0, rld - window)
+            if mode == self.prefetch:
+                r.h2d_stall_s = stall
+            total += stall
+        if mode == self.prefetch:
+            self.h2d_exposed_s = total
+        return total
+
     # -- derived ------------------------------------------------------------
     @property
     def peak_bytes(self) -> int:
@@ -379,17 +432,22 @@ class MemLedger:
             w = csv.writer(f)
             w.writerow(["tick", "chunk", "valid", "alpha", "mat_bytes",
                         "off_bytes", "resident_bytes", "moments_dev_bytes",
-                        "fwd_t", "bwd_t"])
+                        "h2d_stall_s", "fwd_t", "bwd_t"])
             for r in self.ticks:
                 w.writerow([r.tick, r.chunk, int(r.valid),
                             f"{r.alpha:.4f}", r.mat_bytes, r.off_bytes,
                             r.resident,
                             "" if mom is None else mom.dev_resident_bytes,
+                            ("" if r.h2d_stall_s is None
+                             else f"{r.h2d_stall_s:.9f}"),
                             "" if r.fwd_t is None else f"{r.fwd_t:.6f}",
                             "" if r.bwd_t is None else f"{r.bwd_t:.6f}"])
             w.writerow([])
             w.writerow(["peak_bytes", self.peak_bytes])
             w.writerow(["host_bytes", self.host_bytes])
+            w.writerow(["prefetch_ahead", int(self.prefetch == "ahead")])
+            if self.h2d_exposed_s is not None:
+                w.writerow(["h2d_exposed_s", f"{self.h2d_exposed_s:.9f}"])
             if self.step_time_s is not None:
                 w.writerow(["step_time_s", f"{self.step_time_s:.6f}"])
             if self.exposed_transfer_s is not None:
@@ -428,7 +486,7 @@ def read_csv(path: str) -> Dict[str, object]:
                 for k, val in zip(header, line):
                     if val == "":
                         row[k] = None
-                    elif k == "alpha" or k.endswith("_t"):
+                    elif k == "alpha" or k.endswith("_t") or k.endswith("_s"):
                         row[k] = float(val)
                     else:
                         row[k] = int(val)
@@ -541,9 +599,12 @@ def predicted_spmd_peak(cell) -> float:
     """The simulator's predicted §5.2 peak for `cell`'s executed form:
     analytic tagged bytes (costmodel.chunk_act_bytes, scaled from the
     bf16 estimate to the cell's activation dtype) played through
-    simulate.spmd_tick_peak over the runner's feed events.  The single
-    formula behind the CI memory-gate, the honesty tests, and the
-    ablation example."""
+    simulate.spmd_tick_peak over the runner's feed events, with each
+    chunk's α discretized to the row split the tags actually deploy
+    (``offload.quantized_alpha`` over the chunk's local row count) so the
+    prediction cannot drift from the executed program at small shapes.
+    The single formula behind the CI memory-gate, the honesty tests, and
+    the ablation example."""
     from repro.core import costmodel as cm
     from repro.core import simulate as sim
     from repro.parallel import runner
@@ -554,9 +615,11 @@ def predicted_spmd_peak(cell) -> float:
                               sp=cell.plan.sp,
                               grad_accum=cell.plan.grad_accum)
     scale = jnp.dtype(cell.dtype).itemsize / cm.ACT_ITEMSIZE
+    alphas_q = [ofl.quantized_alpha(ln // cell.plan.sp, a)
+                for ln, a in zip(cell.sched.lengths, cell.alphas)]
     peak, _ = sim.spmd_tick_peak(events, pp=cell.plan.pp,
                                  chunk_acts=[a * scale for a in acts],
-                                 alphas=cell.alphas)
+                                 alphas=alphas_q)
     return peak
 
 
@@ -651,15 +714,19 @@ def _measure_opt(cell, ledger: MemLedger, params, grads) -> None:
 
 
 def measure(cell, *, data_size: int, model_size: int, seed: int = 0,
-            baseline: bool = True, opt: bool = False) -> MemLedger:
+            baseline: bool = True, opt: bool = False,
+            d2h_bw: Optional[float] = None) -> MemLedger:
     """Execute one real train-grad step of `cell` on an emulated mesh with
     the ledger attached, measure the tagged bytes from the traced jaxpr,
     and (optionally) time an offload-off baseline for the exposed-transfer
     estimate.  With ``opt`` the optimizer update is measured too (the
     moments channel, §11): one real AdamW step over the measured grads
-    with the plan's ``offload_moments``/``moments_mode``.  Requires
-    grad_accum == 1 (the jaxpr scan walk would otherwise multiply the
-    per-microbatch bytes by the accumulation factor)."""
+    with the plan's ``offload_moments``/``moments_mode``.  ``d2h_bw``
+    prices the exposed-H2D channel (§12); pass the bandwidth of the
+    hardware profile the cell was resolved against when it is not the
+    default V5E.  Requires grad_accum == 1 (the jaxpr scan walk would
+    otherwise multiply the per-microbatch bytes by the accumulation
+    factor)."""
     import dataclasses
 
     from repro.parallel import runner
@@ -687,6 +754,12 @@ def measure(cell, *, data_size: int, model_size: int, seed: int = 0,
 
     events = runner.pipeline_feed_events(plan, cell.sched.n)
     ledger.load_tagged(per_suffix, events, plan.pp, cell.alphas)
+
+    # 2c) priced exposed-H2D over the measured bytes/windows (§12)
+    from repro.core import costmodel as _cm
+
+    ledger.prefetch = plan.prefetch
+    ledger.price_h2d(bw=d2h_bw if d2h_bw is not None else _cm.V5E.d2h_bw)
 
     # 2b) optimizer-state channel over the measured grads
     if opt:

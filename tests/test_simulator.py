@@ -118,6 +118,49 @@ def test_unhidden_d2h_stall_is_charged():
     assert adaptive.total == pytest.approx(free.total)
 
 
+def test_prefetch_sync_lane_exposes_reloads():
+    """prefetch='sync' (autodiff placement) serializes every reload into
+    its own backward: charged h2d_stall and total time are never below the
+    memory-mirror 'ahead' mode, and with reloads that fit their hiding
+    windows the gap is strict."""
+    acts = [5.0, 4.0, 3.0, 2.0]
+    times = [1.0] * 4
+    plan = ofl.sequence_aware_alphas(acts, [t / 3 for t in times], 2.0)
+    ahead = sim.simulate_schedule(times, pp=2, chunk_acts=acts,
+                                  alphas=plan.alphas, d2h_bw=2.0)
+    syncd = sim.simulate_schedule(times, pp=2, chunk_acts=acts,
+                                  alphas=plan.alphas, d2h_bw=2.0,
+                                  prefetch="sync")
+    assert syncd.h2d_stall > ahead.h2d_stall
+    assert syncd.total >= ahead.total
+    # identical forward: the lane mode only moves backward reloads
+    assert syncd.peak_units == ahead.peak_units
+    with pytest.raises(AssertionError):
+        sim.simulate_schedule(times, pp=2, prefetch="nope")
+
+
+def test_backward_h2d_lane_waits_for_first_cotangent():
+    """The reload lane of stage s < pp−1 opens at the arrival of its first
+    backward cotangent (the runner's link_drain hand-off), not at the
+    stage's own last forward: with the last chunk offloading
+    (reserve_last=False territory), stage 0 must not pre-load during its
+    drain bubble."""
+    times = [1.0] * 4
+    acts = [1.0] * 4
+    r = sim.simulate_schedule(times, pp=2, chunk_acts=acts,
+                              alphas=[0.5, 0.5, 0.5, 0.5], d2h_bw=100.0)
+    h2d0 = [ev for ev in r.trace if ev.stage == 0 and ev.lane == sim.H2D]
+    # stage 0's first cotangent needs stage 1's last forward AND its first
+    # backward event; the old fwd_end[s][ne-1] init allowed reloads in the
+    # drain bubble before either
+    fwd1_end = max(ev.end for ev in r.trace
+                   if ev.stage == 1 and ev.lane == sim.FWD)
+    bwd1_first = min(ev.start for ev in r.trace
+                     if ev.stage == 1 and ev.lane == sim.BWD)
+    assert min(ev.start for ev in h2d0) >= fwd1_end
+    assert min(ev.start for ev in h2d0) >= bwd1_first
+
+
 def test_p2p_lane_delays_downstream_stages():
     costs = [1.0] * 4
     free = sim.simulate_schedule(costs, pp=2)

@@ -103,6 +103,40 @@ def test_alpha_bounds_and_peak(n, bw, scale):
     assert full <= max(acts[i] + acts[i + 1] for i in range(n - 1)) + 1e-6
 
 
+def test_reserve_last_false_window_is_first_backward():
+    """With reserve_last=False the last chunk's round trip is exposed (its
+    own backward consumes the reload), so α is sized against the *first
+    backward event's* duration — comp_times[-1] · bwd_over_fwd — as the
+    exposure budget, not the (already-spent) forward time."""
+    acts, times = [10.0] * 3, [1.0] * 3
+    plan = ofl.sequence_aware_alphas(acts, times, 2.0, reserve_last=False)
+    # interior: BW·T_next/A = 2·1/10; last: BW·(T·2)/A = 2·2/10
+    assert plan.alphas == pytest.approx((0.2, 0.2, 0.4))
+    plan3 = ofl.sequence_aware_alphas(acts, times, 2.0, reserve_last=False,
+                                      bwd_over_fwd=3.0)
+    assert plan3.alphas[-1] == pytest.approx(0.6)
+    assert plan3.alphas[:-1] == plan.alphas[:-1]
+    # the default still reserves the last chunk
+    assert ofl.sequence_aware_alphas(acts, times, 2.0).alphas[-1] == 0.0
+    # and the ratio stays clipped to [0, 1] in the saturated regime
+    sat = ofl.sequence_aware_alphas(acts, times, 1e9, reserve_last=False)
+    assert sat.alphas == (1.0, 1.0, 1.0)
+
+
+@given(st.integers(1, 512), st.floats(0.0, 1.0))
+@settings(max_examples=60, deadline=None)
+def test_split_rows_quantization(rows, alpha):
+    """split_rows rounds to the nearest row with no forced minimum — the
+    deployed ratio quantized_alpha is within half a row of the continuous
+    α, and the old `max(1, ...)` bias on small α is gone."""
+    k = ofl.split_rows(rows, alpha)
+    assert 0 <= k <= rows
+    assert abs(k - rows * alpha) <= 0.5 + 1e-9
+    assert ofl.quantized_alpha(rows, alpha) == k / rows
+    if alpha * rows < 0.5 - 1e-9:
+        assert k == 0
+
+
 def test_memory_recurrence_matches_paper():
     """M_i = M_{i-1} + A_i − α_{i-1}A_{i-1} — explicit small case."""
     acts = [4.0, 3.0, 2.0, 1.0]
