@@ -1,0 +1,204 @@
+"""Packed-vs-padded throughput gate (DESIGN.md §13).
+
+Builds one seeded skewed-length corpus (the Zipf histogram real pretraining
+mixes look like), lays it out two ways —
+
+  * ``packed``  — greedy first-fit-decreasing packing into rows of
+    ``seq_len`` with the per-query segment window (``doc_start``) keeping
+    documents from attending across boundaries, profile-balanced chunks;
+  * ``padded``  — the pad-to-max baseline: one document per row, every row
+    padded to the full ``seq_len``;
+
+and times one real train step (loss + grads through the SPPO pp=1 chunk
+loop) for each.  Both layouts compute the loss over exactly the same real
+tokens (the label sentinel zero-weights padding), so tokens/sec over real
+tokens is an apples-to-apples throughput.  The gate fails unless packed
+beats padded by ``--factor`` (the packing removes ~Nx redundant padding
+rows, so the margin is structural, not a timing accident).
+
+``--fast`` skips the wall-clock measurement and gates on the analytic cost
+ratio from the packed cost profile (the same sawtooth the partitioner
+balances) — the mode ``benchmarks.run`` registers.
+
+  PYTHONPATH=src python -m benchmarks.bench_varlen \
+      [--fast] [--factor 1.5] [--csv varlen.csv]
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+from typing import List, Tuple
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ShapeConfig, get_config
+from repro.core import partition as part
+from repro.data import pipeline as dpipe
+from repro.models.model_zoo import build_model
+from repro.parallel.ctx import SINGLE
+from repro.parallel.runner import resolve_cell, run_pipeline
+
+ARCH = "qwen2-7b"
+SEQ_LEN = 256
+N_DOCS = 12
+MEAN_LEN = 48
+MAX_LEN = 224
+SEED = 0
+DEFAULT_FACTOR = 1.5
+
+
+def _build_corpus():
+    cfg = get_config(ARCH).reduced()
+    docs = dpipe.sample_corpus(N_DOCS, vocab_size=cfg.vocab_size, seed=SEED,
+                               dist="zipf", mean_len=MEAN_LEN,
+                               max_len=MAX_LEN)
+    return cfg, docs
+
+
+def _step_time(mdef, cell, batch, reps: int = 3) -> float:
+    """Best-of-N wall time of one jitted loss+grad step (seconds)."""
+    import dataclasses
+
+    cell = dataclasses.replace(cell, dtype=jnp.float32)
+    key = jax.random.PRNGKey(0)
+    sp1 = mdef.init_stage_params(key, 0, 1, jnp.float32)
+    g1 = mdef.init_globals(key, jnp.float32)
+    tok = jnp.asarray(batch.tokens)
+    lab = jnp.asarray(batch.labels)
+    ds = jnp.asarray(batch.doc_start) if cell.varlen else None
+
+    def loss(sp_, g_):
+        out = run_pipeline(cell, SINGLE, sp_, g_, tok, lab, None,
+                           with_loss=True, doc_start=ds)
+        return out["loss"] / jnp.maximum(out["denom"], 1.0)
+
+    step = jax.jit(jax.value_and_grad(loss, argnums=(0, 1)))
+    jax.block_until_ready(step(sp1, g1))  # compile
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(step(sp1, g1))
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def _analytic_cost(row_lens, r: float) -> float:
+    """Total relative step cost of a layout: sum of its packed profile."""
+    return float(part.packed_cost_profile(row_lens, SEQ_LEN, r).sum())
+
+
+def bench_varlen(measure: bool = True, factor: float = DEFAULT_FACTOR,
+                 csv_path: str | None = None) -> Tuple[List, str, bool]:
+    """Returns (csv_rows, text, gate_ok)."""
+    cfg, docs = _build_corpus()
+    mdef = build_model(cfg)
+    lens = [len(d) for d in docs]
+    real_tokens = sum(lens)
+    r = part.flops_per_token_ratio(cfg)
+
+    packed = dpipe.pack_documents(docs, SEQ_LEN)
+    padded = dpipe.pad_to_max(docs, SEQ_LEN)
+    rows_packed = part.pack_lengths(lens, SEQ_LEN)
+    packed_rl = [[lens[i] for i in row] for row in rows_packed]
+    padded_rl = [[ln] for ln in lens]
+
+    cells = []
+    for name, batch, doc_lens in (("packed", packed, lens),
+                                  ("padded", padded, None)):
+        B = batch.tokens.shape[0]
+        shape = ShapeConfig(f"varlen-{name}", SEQ_LEN, B, "train")
+        cell = resolve_cell(mdef, shape, data_size=1, model_size=1,
+                            overrides=dict(n_chunks=4, grad_accum=1,
+                                           partition="flops", offload=False),
+                            doc_lens=doc_lens)
+        cells.append((name, batch, cell))
+
+    analytic = {"packed": _analytic_cost(packed_rl, r),
+                "padded": _analytic_cost(padded_rl, r)}
+    times = {}
+    if measure:
+        for name, batch, cell in cells:
+            times[name] = _step_time(mdef, cell, batch)
+
+    ratio_analytic = analytic["padded"] / analytic["packed"]
+    ratio = (times["padded"] / times["packed"]) if measure else ratio_analytic
+    ok = ratio >= factor
+
+    csv_rows = []
+    lines = [f"== Packed vs pad-to-max throughput ({ARCH} reduced, "
+             f"S={SEQ_LEN}, {N_DOCS} zipf docs, {real_tokens} real "
+             "tokens) =="]
+    for name, batch, cell in cells:
+        B = batch.tokens.shape[0]
+        pad_frac = 1.0 - real_tokens / (B * SEQ_LEN)
+        t = times.get(name)
+        tput = real_tokens / t if t else 0.0
+        csv_rows.append((f"varlen_{name}",
+                         f"{t * 1e6:.0f}" if t else "",
+                         f"{analytic[name]:.0f}"))
+        lines.append(
+            f"{name:8s} rows {B:3d}  pad {pad_frac:6.1%}  "
+            f"chunks {cell.sched.lengths}  "
+            + (f"step {t * 1e3:8.1f} ms  {tput:9.0f} tok/s"
+               if t else f"analytic cost {analytic[name]:.0f}"))
+    lines.append(
+        f"speedup packed/padded: "
+        + (f"{ratio:.2f}x measured, " if measure else "")
+        + f"{ratio_analytic:.2f}x analytic "
+        f"(gate: >= {factor:.2f}x -> {'OK' if ok else 'FAIL'})")
+    csv_rows.append(("varlen_speedup",
+                     f"{ratio:.3f}" if measure else "",
+                     f"{ratio_analytic:.3f}"))
+
+    if csv_path:
+        import csv as _csv
+
+        with open(csv_path, "w", newline="") as f:
+            w = _csv.writer(f)
+            w.writerow(["cell", "rows", "real_tokens", "pad_frac",
+                        "step_s", "tok_per_s", "analytic_cost"])
+            for name, batch, cell in cells:
+                B = batch.tokens.shape[0]
+                t = times.get(name)
+                w.writerow([name, B, real_tokens,
+                            f"{1.0 - real_tokens / (B * SEQ_LEN):.4f}",
+                            f"{t:.6f}" if t else "",
+                            f"{real_tokens / t:.1f}" if t else "",
+                            f"{analytic[name]:.1f}"])
+            w.writerow([])
+            w.writerow(["speedup_measured", f"{ratio:.4f}" if measure
+                        else ""])
+            w.writerow(["speedup_analytic", f"{ratio_analytic:.4f}"])
+            w.writerow(["factor", f"{factor:.2f}"])
+            w.writerow(["gate_ok", int(ok)])
+    return csv_rows, "\n".join(lines), ok
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="gate on the analytic cost ratio (no wall clock)")
+    ap.add_argument("--factor", type=float, default=DEFAULT_FACTOR)
+    ap.add_argument("--csv", default=None)
+    args = ap.parse_args(argv)
+    rows, text, ok = bench_varlen(measure=not args.fast,
+                                  factor=args.factor, csv_path=args.csv)
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us},{derived}")
+    print()
+    print(text)
+    if not ok:
+        print("\nVARLEN GATE FAILED: packed layout did not clear the "
+              f"pinned {args.factor:.2f}x margin", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

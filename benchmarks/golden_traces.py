@@ -51,6 +51,21 @@ CONFIGS = [
     ("gpt7b_reduced_pp2_syncpf",
      dict(arch="sppo-gpt-7b", reduced=True, seq_len=256, batch=4,
           n_params=None, pp=2, n=4, sp=2, msp=False, prefetch="sync")),
+    # packed variable-length workload cells (DESIGN.md §13): doc_lens specs
+    # resolve through data.pipeline.sample_doc_lengths (seeded histogram),
+    # the candidate runs the packed cost profile instead of the uniform
+    # triangle — freezing the profile-balanced boundaries and the
+    # per-batch sequence-aware alphas they induce
+    ("gpt7b_seq512k_pp4_n8_varlen",
+     dict(arch="sppo-gpt-7b", seq_len=524288, batch=4,
+          n_params=6_700_000_000, pp=4, n=8, sp=16, msp=False,
+          doc_lens=dict(n_docs=24, seed=0, dist="zipf", mean_len=49152,
+                        max_len=393216))),
+    ("gpt7b_reduced_pp2_varlen",
+     dict(arch="sppo-gpt-7b", reduced=True, seq_len=256, batch=4,
+          n_params=None, pp=2, n=4, sp=2, msp=False,
+          doc_lens=dict(n_docs=16, seed=0, dist="zipf", mean_len=48,
+                        max_len=192))),
 ]
 
 
@@ -65,6 +80,11 @@ def trace_lines(spec: dict) -> list:
         from repro.parallel import specs as SP
         spec["n_params"] = SP.count_active_params(
             build_model(cfg), spec["pp"], spec["pp"])
+    if isinstance(spec.get("doc_lens"), dict):
+        # seeded histogram spec -> concrete document lengths (§13)
+        from repro.data import pipeline as dpipe
+        spec["doc_lens"] = [int(x) for x in
+                            dpipe.sample_doc_lengths(**spec["doc_lens"])]
     total, alphas, res = solver.simulate_candidate(cfg, **spec)
     lines = [
         "# golden schedule trace — regenerate with "

@@ -66,6 +66,15 @@ def run_gate(gate: dict):
     mdef = build_model(cfg)
     opt_gate = bool(gate.get("offload_moments", False))
     shape = ShapeConfig(gate["name"], gate["seq"], gate["batch"], "train")
+    doc_lens = None
+    if gate.get("doc_lens"):
+        # packed variable-length gate cell (DESIGN.md §13): the seeded
+        # skewed histogram resolves to document lengths, the measured step
+        # runs the packed batch generated from them
+        from repro.data import pipeline as dpipe
+
+        doc_lens = [int(x) for x in
+                    dpipe.sample_doc_lengths(**gate["doc_lens"])]
     cell = runner.resolve_cell(
         mdef, shape, data_size=gate["data_size"],
         model_size=gate["model_size"],
@@ -74,7 +83,8 @@ def run_gate(gate: dict):
                        partition="length", offload=True,
                        msp=gate.get("msp", False),
                        offload_moments=opt_gate,
-                       opt_dtype=gate.get("opt_dtype", "float32")))
+                       opt_dtype=gate.get("opt_dtype", "float32")),
+        doc_lens=doc_lens)
     cell = dataclasses.replace(cell, dtype=DTYPES[gate.get("dtype",
                                                            "bfloat16")])
     led = ml.measure(cell, data_size=gate["data_size"],

@@ -16,6 +16,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
 from benchmarks import figures  # noqa: E402
 from benchmarks.bench_attention import bench_attention  # noqa: E402
+from benchmarks.bench_varlen import bench_varlen  # noqa: E402
 
 
 def main() -> None:
@@ -37,6 +38,8 @@ def main() -> None:
         ("bench_solver", figures.bench_solver),
         ("bench_attention",
          lambda: bench_attention(measure=not args.fast, fast=args.fast)),
+        ("bench_varlen",
+         lambda: bench_varlen(measure=not args.fast)[:2]),
     ]
     all_rows = []
     texts = []

@@ -17,7 +17,9 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass
-from typing import List, Sequence
+from typing import List, Optional, Sequence
+
+import numpy as np
 
 
 @dataclass(frozen=True)
@@ -50,13 +52,20 @@ def chunk_cost(a: int, b: int, r: float) -> float:
     return (b - a) + r * (b * b - a * a) / 2.0
 
 
+def _clamp_chunks(seq_len: int, n: int, multiple: int) -> int:
+    """Largest feasible chunk count: every chunk needs >= max(multiple, 1)
+    tokens, so n*multiple > seq_len degrades to fewer chunks, never to
+    zero-length (or negative) chunks."""
+    return max(1, min(n, seq_len // max(multiple, 1)))
+
+
 def partition_length(seq_len: int, n: int, multiple: int = 1) -> ChunkSchedule:
+    n = _clamp_chunks(seq_len, n, multiple)
     if n == 1:  # single chunk: the multiple constraint is vacuous
         return ChunkSchedule((seq_len,), (0,), seq_len, "length")
-    assert seq_len % (n * multiple) == 0 or multiple == 1, \
-        f"seq {seq_len} not divisible into {n} chunks of multiple {multiple}"
-    base = seq_len // n
-    base = base // multiple * multiple
+    # base >= multiple by the feasibility clamp (n <= seq_len // multiple);
+    # the last chunk absorbs the non-divisible remainder.
+    base = seq_len // n // max(multiple, 1) * max(multiple, 1)
     lens = [base] * n
     lens[-1] += seq_len - base * n
     offs = [sum(lens[:i]) for i in range(n)]
@@ -71,16 +80,26 @@ def partition_flops(seq_len: int, n: int, r: float,
         b + r b^2/2 = (i/n)(S + r S^2/2)   (quadratic in b).
     Boundaries are rounded to ``multiple`` (sequence-shard divisibility).
     """
-    if r <= 0:
+    n = _clamp_chunks(seq_len, n, multiple)
+    if r <= 0 or n == 1:
         return partition_length(seq_len, n, multiple)
     total = chunk_cost(0, seq_len, r)
     bounds = [0]
+    mult = max(multiple, 1)
     for i in range(1, n):
         target = total * i / n
         # solve r/2 b^2 + b - target = 0
         b = (-1 + math.sqrt(1 + 2 * r * target)) / r
-        b = int(round(b / multiple)) * multiple
-        b = max(bounds[-1] + multiple, min(b, seq_len - (n - i) * multiple))
+        b = int(round(b / mult)) * mult
+        # lower clamp first, upper clamp last.  The cap reserves >= mult
+        # tokens per remaining chunk *in aligned units*: with a non-divisible
+        # seq_len, `seq_len - (n - i) * mult` is itself unaligned and would
+        # leak a misaligned interior boundary (e.g. S=37, mult=16 -> 21).
+        # bounds[i-1] + mult never exceeds the cap once n is feasibility-
+        # clamped, so by induction every length stays positive and every
+        # interior boundary stays multiple-aligned; only the last chunk
+        # absorbs the remainder.
+        b = min((seq_len // mult - (n - i)) * mult, max(b, bounds[-1] + mult))
         bounds.append(b)
     bounds.append(seq_len)
     lens = tuple(bounds[i + 1] - bounds[i] for i in range(n))
@@ -99,6 +118,126 @@ def partition(seq_len: int, n: int, cfg, policy: str = "flops",
 
 def chunk_costs(sched: ChunkSchedule, r: float) -> List[float]:
     return [chunk_cost(a, a + l, r)
+            for a, l in zip(sched.offsets, sched.lengths)]
+
+
+# ---------------------------------------------------------------------------
+# Packed variable-length layouts (FlexSP / Seq1F1B adaptation, DESIGN.md §13)
+# ---------------------------------------------------------------------------
+#
+# A packed batch keeps each document contiguous inside a fixed-width row of
+# ``seq_len`` tokens (tail padding only).  Causal attention restarts at every
+# document boundary, so the per-position cost profile is sawtoothed — a token
+# at in-document offset d costs 1 + r*d (its causal window is d+1 tokens) —
+# instead of the single triangle the uniform-sequence partitioner assumes.
+# ``packed_cost_profile`` materializes that profile summed over the batch
+# rows and ``partition_profile`` equalizes its cumulative sum (the Seq1F1B
+# FLOPs-balance generalized to arbitrary profiles), snapping boundaries to
+# nearby aligned document boundaries where possible.
+
+
+def pack_lengths(lengths: Sequence[int], seq_len: int) -> List[List[int]]:
+    """Greedy first-fit-decreasing bin packing of document lengths into rows
+    of ``seq_len`` tokens.  Returns, per row, the list of *document indices*
+    (into ``lengths``) in placement order.  Every document is placed exactly
+    once — no drops, no duplicates, no splits (each length must fit a row)."""
+    order = sorted(range(len(lengths)), key=lambda i: (-lengths[i], i))
+    rows: List[List[int]] = []
+    free: List[int] = []
+    for i in order:
+        ln = int(lengths[i])
+        assert 0 < ln <= seq_len, f"doc {i} length {ln} vs row {seq_len}"
+        for rix, f in enumerate(free):
+            if f >= ln:
+                rows[rix].append(i)
+                free[rix] -= ln
+                break
+        else:
+            rows.append([i])
+            free.append(seq_len - ln)
+    return rows
+
+
+def packed_cost_profile(row_lens: Sequence[Sequence[int]], seq_len: int,
+                        r: float) -> np.ndarray:
+    """Per-position relative cost [seq_len] of a packed batch, summed over
+    rows.  ``row_lens[row]`` lists the document lengths packed into that row
+    (contiguous, in order, tail-padded).  A real token at in-document offset
+    d costs 1 + r*d; padding positions cost 1 (they still ride the dense
+    projections/MLP) with no attention term (fully masked)."""
+    prof = np.zeros(seq_len, dtype=np.float64)
+    for lens in row_lens:
+        pos = 0
+        for ln in lens:
+            ln = int(ln)
+            prof[pos:pos + ln] += 1.0 + r * np.arange(ln, dtype=np.float64)
+            pos += ln
+        assert pos <= seq_len, f"row overflows: {sum(lens)} > {seq_len}"
+        prof[pos:] += 1.0
+    return prof
+
+
+def partition_profile(profile: Sequence[float], n: int, multiple: int = 1,
+                      doc_bounds: Optional[Sequence[int]] = None
+                      ) -> ChunkSchedule:
+    """Chunk boundaries equalizing the cumulative cost ``profile`` (the
+    packed-layout generalization of :func:`partition_flops`).  Boundaries
+    are rounded to ``multiple``; when ``doc_bounds`` (global positions where
+    a document starts in every row of the packed layout) offers an aligned
+    boundary near the cost-balanced one, it is preferred so chunks respect
+    document boundaries where possible."""
+    prof = np.asarray(profile, dtype=np.float64)
+    seq_len = int(prof.shape[0])
+    n = _clamp_chunks(seq_len, n, multiple)
+    if n == 1:
+        return ChunkSchedule((seq_len,), (0,), seq_len, "flops-packed")
+    mult = max(multiple, 1)
+    cum = np.cumsum(prof)
+    total = float(cum[-1])
+    aligned_docs = sorted(int(b) for b in (doc_bounds or ())
+                          if 0 < b < seq_len and b % mult == 0)
+    bounds = [0]
+    for i in range(1, n):
+        target = total * i / n
+        b = int(np.searchsorted(cum, target)) + 1
+        b = int(round(b / mult)) * mult
+        # aligned cap, as in partition_flops: keep interior boundaries on
+        # the multiple even when seq_len % mult != 0
+        lo, hi = bounds[-1] + mult, (seq_len // mult - (n - i)) * mult
+        b = min(hi, max(b, lo))
+        # prefer a document boundary within half a mean chunk of the
+        # balanced position (it can only cost a bounded imbalance)
+        window = max(mult, seq_len // (2 * n))
+        cand = [d for d in aligned_docs if lo <= d <= hi
+                and abs(d - b) <= window]
+        if cand:
+            b = min(cand, key=lambda d: abs(d - b))
+        bounds.append(b)
+    bounds.append(seq_len)
+    lens = tuple(bounds[i + 1] - bounds[i] for i in range(n))
+    assert all(l > 0 for l in lens) and sum(lens) == seq_len
+    return ChunkSchedule(lens, tuple(bounds[:-1]), seq_len, "flops-packed")
+
+
+def aligned_doc_bounds(row_lens: Sequence[Sequence[int]],
+                       seq_len: int) -> List[int]:
+    """Positions that are document boundaries in *every* row of the packed
+    layout — a chunk cut there never splits a document.  A row's tail
+    padding region counts as all-boundary (cutting padding is free)."""
+    common: Optional[set] = None
+    for lens in row_lens:
+        lens = [int(l) for l in lens]
+        cuts = set(np.cumsum(lens).tolist()) if lens else set()
+        cuts |= set(range(sum(lens), seq_len + 1))
+        common = cuts if common is None else (common & cuts)
+    return sorted(b for b in (common or ()) if 0 < b < seq_len)
+
+
+def profile_chunk_costs(profile: Sequence[float],
+                        sched: ChunkSchedule) -> List[float]:
+    """Per-chunk cost sums of a packed-layout profile under ``sched``."""
+    prof = np.asarray(profile, dtype=np.float64)
+    return [float(prof[a:a + l].sum())
             for a, l in zip(sched.offsets, sched.lengths)]
 
 

@@ -62,7 +62,8 @@ def simulate_candidate(cfg, seq_len: int, batch: int, n_params: int,
                        msp_split: int = 2, offload: bool = True,
                        offload_moments: bool = False,
                        opt_dtype: str = "float32",
-                       prefetch: str = "ahead"
+                       prefetch: str = "ahead",
+                       doc_lens=None
                        ) -> Tuple[float, tuple, sim.SimResult]:
     """Build the candidate's cost/activation profile and play it out.
 
@@ -72,20 +73,45 @@ def simulate_candidate(cfg, seq_len: int, batch: int, n_params: int,
     charged in full on top of the pipeline playout.  prefetch selects the
     simulator's H2D lane mode (DESIGN.md §12): "ahead" prices the
     one-chunk-ahead reload seam, "sync" the autodiff placement — both
-    plan settings therefore have priced predictions."""
+    plan settings therefore have priced predictions.
+
+    doc_lens (optional) switches the candidate to a packed variable-length
+    workload cell (DESIGN.md §13): the documents are greedily packed into
+    ``batch`` rows of ``seq_len``, the per-position causal-sawtooth cost
+    profile replaces the single triangle, and chunk boundaries / offload
+    ratios are balanced over that measured profile."""
     r = part.flops_per_token_ratio(cfg)
-    sched = part.partition(seq_len, n, cfg, "length")
-    costs = part.chunk_costs(sched, r)
-    # convert relative costs to flops: linear term == per-token matmul flops
     tok_flops = cm.model_flops_per_token(n_params, train=True)
-    scale = (batch * seq_len * tok_flops) / sum(costs)
-    chunk_flops = [c * scale for c in costs]
     chips = sp * pp
-    # backward/forward split: the recompute-based flash backward makes the
-    # attention share cost 2.5x its forward (vs 2x for matmuls); weight by
-    # the attention fraction of the relative chunk costs.  Σcosts =
-    # Σlengths + attention term, so the linear share is Σlen/Σcost.
-    attn_frac = 1.0 - sum(sched.lengths) / sum(costs)
+    if doc_lens:
+        doc_lens = [int(x) for x in doc_lens]
+        rows = part.pack_lengths(doc_lens, seq_len)
+        row_lens = [[doc_lens[i] for i in row] for row in rows]
+        assert len(row_lens) <= batch, (
+            f"packing needs {len(row_lens)} rows > batch {batch}")
+        row_lens += [[] for _ in range(batch - len(row_lens))]
+        profile = part.packed_cost_profile(row_lens, seq_len, r)
+        sched = part.partition_profile(
+            profile, n, multiple=sp,
+            doc_bounds=part.aligned_doc_bounds(row_lens, seq_len))
+        # profile units already sum over the batch rows (padding rows ride
+        # the dense matmuls at linear cost)
+        costs = part.profile_chunk_costs(profile, sched)
+        # profile cost units cover all batch rows, so the flops conversion
+        # and the linear share are taken against batch*seq_len units
+        scale = (batch * seq_len * tok_flops) / sum(costs)
+        attn_frac = 1.0 - (batch * seq_len) / sum(costs)
+    else:
+        sched = part.partition(seq_len, n, cfg, "length")
+        costs = part.chunk_costs(sched, r)
+        # convert relative costs to flops: linear == per-token matmul flops
+        scale = (batch * seq_len * tok_flops) / sum(costs)
+        # backward/forward split: the recompute-based flash backward makes
+        # the attention share cost 2.5x its forward (vs 2x for matmuls);
+        # weight by the attention fraction of the relative chunk costs.
+        # Σcosts = Σlengths + attention term: linear share is Σlen/Σcost.
+        attn_frac = 1.0 - sum(sched.lengths) / sum(costs)
+    chunk_flops = [c * scale for c in costs]
     bwd_ratio = cm.effective_bwd_ratio(attn_frac)
     # the 6N lumped convention prices bwd at 2x fwd; the QK^T recompute of
     # the attention backward adds (1+bwd_ratio)/3 on top

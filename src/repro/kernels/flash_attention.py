@@ -61,7 +61,7 @@ NEG_INF = -1e30
 PAD_POS = 2**30
 
 
-def _flash_partial_kernel(qpos_ref, kpos_ref,     # prefetch-style position blocks
+def _flash_partial_kernel(qpos_ref, kpos_ref, qstart_ref,  # position blocks
                           q_ref, k_ref, v_ref,    # [bq*G, hd] / [bk, hd] blocks
                           o_ref, m_ref, l_ref,    # outputs
                           acc_ref, mm_ref, ll_ref,  # VMEM scratch
@@ -80,7 +80,8 @@ def _flash_partial_kernel(qpos_ref, kpos_ref,     # prefetch-style position bloc
     v = v_ref[...].astype(jnp.float32)          # [bk, hv]
     s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale  # [G*bq, bk]
 
-    s = jnp.where(_visible(qpos_ref, kpos_ref, g, causal), s, NEG_INF)
+    s = jnp.where(_visible(qpos_ref, kpos_ref, qstart_ref, g, causal),
+                  s, NEG_INF)
 
     m_prev = mm_ref[...]                        # [G*bq, 1]
     m_blk = jnp.max(s, axis=-1, keepdims=True)
@@ -100,24 +101,32 @@ def _flash_partial_kernel(qpos_ref, kpos_ref,     # prefetch-style position bloc
         l_ref[...] = ll_ref[...].astype(l_ref.dtype)
 
 
-def _visible(qpos_ref, kpos_ref, g: int, causal: bool):
-    """[G*bq, bk] visibility mask — identical in forward and backward."""
+def _visible(qpos_ref, kpos_ref, qstart_ref, g: int, causal: bool):
+    """[G*bq, bk] visibility mask — identical in forward and backward.
+    ``qstart_ref`` is the per-query segment window (packed-document
+    blocking, [bq] int32 per batch row): a kv slot is visible only when
+    kv_pos >= q_start.  Zeros degenerate to the plain positional mask;
+    PAD_POS marks dead (padding) query rows — no real kv slot reaches
+    2**30, so those rows mask fully."""
     qpos = qpos_ref[...]                        # [bq] int32
     kpos = kpos_ref[...]                        # [bk] int32
     qpos_g = jnp.tile(qpos, (g,))               # [G*bq] — heads share positions
+    qstart_g = jnp.tile(qstart_ref[...], (g,))  # [G*bq] — per batch row
     valid = (kpos[None, :] != PAD_POS)
     if causal:
         valid = valid & (qpos_g[:, None] >= kpos[None, :])
+    valid = valid & (kpos[None, :] >= qstart_g[:, None])
     return valid
 
 
-def _recompute_p_ds(qpos_ref, kpos_ref, q, k, v, do, m, dl,
+def _recompute_p_ds(qpos_ref, kpos_ref, qstart_ref, q, k, v, do, m, dl,
                     *, causal: bool, scale: float, g: int):
     """Shared backward block math: recompute p from the saved logsumexp row
     statistic, then dS = P ∘ (dO·Vᵀ + dl).  m is treated as a constant (the
     gradient-frozen max statistic, see module docstring)."""
     s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale
-    s = jnp.where(_visible(qpos_ref, kpos_ref, g, causal), s, NEG_INF)
+    s = jnp.where(_visible(qpos_ref, kpos_ref, qstart_ref, g, causal),
+                  s, NEG_INF)
     # fully-masked rows carry m == NEG_INF; exp(NEG_INF - NEG_INF) would be 1
     safe = m > NEG_INF / 2                       # [G*bq, 1]
     p = jnp.where(safe, jnp.exp(s - m), 0.0)     # [G*bq, bk]
@@ -125,7 +134,7 @@ def _recompute_p_ds(qpos_ref, kpos_ref, q, k, v, do, m, dl,
     return p, p * dp
 
 
-def _flash_bwd_dq_kernel(qpos_ref, kpos_ref, q_ref, k_ref, v_ref,
+def _flash_bwd_dq_kernel(qpos_ref, kpos_ref, qstart_ref, q_ref, k_ref, v_ref,
                          do_ref, m_ref, dl_ref,
                          dq_ref, dq_acc,
                          *, causal: bool, scale: float, g: int, nk: int):
@@ -139,7 +148,7 @@ def _flash_bwd_dq_kernel(qpos_ref, kpos_ref, q_ref, k_ref, v_ref,
     k = k_ref[...].astype(jnp.float32)
     v = v_ref[...].astype(jnp.float32)
     do = do_ref[...].astype(jnp.float32)
-    _, ds = _recompute_p_ds(qpos_ref, kpos_ref, q, k, v, do,
+    _, ds = _recompute_p_ds(qpos_ref, kpos_ref, qstart_ref, q, k, v, do,
                             m_ref[...], dl_ref[...],
                             causal=causal, scale=scale, g=g)
     dq_acc[...] += jax.lax.dot_general(
@@ -150,7 +159,7 @@ def _flash_bwd_dq_kernel(qpos_ref, kpos_ref, q_ref, k_ref, v_ref,
         dq_ref[...] = dq_acc[...].astype(dq_ref.dtype)
 
 
-def _flash_bwd_dkv_kernel(qpos_ref, kpos_ref, q_ref, k_ref, v_ref,
+def _flash_bwd_dkv_kernel(qpos_ref, kpos_ref, qstart_ref, q_ref, k_ref, v_ref,
                           do_ref, m_ref, dl_ref,
                           dk_ref, dv_ref, dk_acc, dv_acc,
                           *, causal: bool, scale: float, g: int, nq: int):
@@ -165,7 +174,7 @@ def _flash_bwd_dkv_kernel(qpos_ref, kpos_ref, q_ref, k_ref, v_ref,
     k = k_ref[...].astype(jnp.float32)
     v = v_ref[...].astype(jnp.float32)
     do = do_ref[...].astype(jnp.float32)
-    p, ds = _recompute_p_ds(qpos_ref, kpos_ref, q, k, v, do,
+    p, ds = _recompute_p_ds(qpos_ref, kpos_ref, qstart_ref, q, k, v, do,
                             m_ref[...], dl_ref[...],
                             causal=causal, scale=scale, g=g)
     # row reductions over the G*bq folded q rows sum the GQA group for free
@@ -195,7 +204,7 @@ def _geometry(Tq: int, S: int, block_q: int, block_k: int):
     return bq, bk, Tqp, Sp, Tqp // bq, Sp // bk
 
 
-def _pad_inputs(q, k, v, q_pos, kv_pos, Tqp, Sp):
+def _pad_inputs(q, k, v, q_pos, kv_pos, q_start, Tqp, Sp):
     Tq, S = q.shape[1], k.shape[1]
     if q_pos.ndim == 2:
         # kernel assumes positions shared across batch; models pass [Tq]
@@ -203,11 +212,14 @@ def _pad_inputs(q, k, v, q_pos, kv_pos, Tqp, Sp):
     if Tqp != Tq:
         q = jnp.pad(q, ((0, 0), (0, Tqp - Tq), (0, 0), (0, 0)))
         q_pos = jnp.pad(q_pos, (0, Tqp - Tq), constant_values=-1)
+        # block-padding query rows are dead: q_start = PAD_POS masks them
+        q_start = jnp.pad(q_start, ((0, 0), (0, Tqp - Tq)),
+                          constant_values=PAD_POS)
     if Sp != S:
         k = jnp.pad(k, ((0, 0), (0, Sp - S), (0, 0), (0, 0)))
         v = jnp.pad(v, ((0, 0), (0, Sp - S), (0, 0), (0, 0)))
         kv_pos = jnp.pad(kv_pos, (0, Sp - S), constant_values=PAD_POS)
-    return q, k, v, q_pos, kv_pos
+    return q, k, v, q_pos, kv_pos, q_start
 
 
 def _fold_q_like(x, B, Hkv, G, nq, bq, last):
@@ -231,14 +243,15 @@ def _fold_kv(x, B, Hkv, Sp, last):
 # ---------------------------------------------------------------------------
 
 
-def _fwd_impl(q, k, v, q_pos, kv_pos, causal, scale, block_q, block_k,
-              interpret):
+def _fwd_impl(q, k, v, q_pos, kv_pos, q_start, causal, scale, block_q,
+              block_k, interpret):
     B, Tq, H, hdk = q.shape
     S, Hkv = k.shape[1], k.shape[2]
     hdv = v.shape[-1]
     G = H // Hkv
     bq, bk, Tqp, Sp, nq, nk = _geometry(Tq, S, block_q, block_k)
-    q, k, v, q_pos, kv_pos = _pad_inputs(q, k, v, q_pos, kv_pos, Tqp, Sp)
+    q, k, v, q_pos, kv_pos, q_start = _pad_inputs(
+        q, k, v, q_pos, kv_pos, q_start, Tqp, Sp)
 
     qg = _fold_q_like(q, B, Hkv, G, nq, bq, hdk)
     kg = _fold_kv(k, B, Hkv, Sp, hdk)
@@ -253,6 +266,9 @@ def _fwd_impl(q, k, v, q_pos, kv_pos, causal, scale, block_q, block_k,
         in_specs=[
             pl.BlockSpec((None, bq), lambda b, i, j: (0, i)),          # q_pos
             pl.BlockSpec((bk,), lambda b, i, j: (j,)),                  # kv_pos
+            # q_start varies per batch row (packed layouts differ row to
+            # row): grid axis 0 is B*Hkv, so row = b // Hkv
+            pl.BlockSpec((None, bq), lambda b, i, j, Hkv=Hkv: (b // Hkv, i)),
             pl.BlockSpec((None, None, G * bq, hdk), lambda b, i, j: (b, i, 0, 0)),
             pl.BlockSpec((None, bk, hdk), lambda b, i, j: (b, j, 0)),
             pl.BlockSpec((None, bk, hdv), lambda b, i, j: (b, j, 0)),
@@ -273,7 +289,8 @@ def _fwd_impl(q, k, v, q_pos, kv_pos, causal, scale, block_q, block_k,
             pltpu.VMEM((G * bq, 1), jnp.float32),     # running sum
         ],
         interpret=interpret,
-    )(jnp.broadcast_to(q_pos[None, :], (1, Tqp)), kv_pos, qg, kg, vg)
+    )(jnp.broadcast_to(q_pos[None, :], (1, Tqp)), kv_pos, q_start,
+      qg, kg, vg)
 
     o = _unfold_q_like(o, B, Hkv, G, nq, bq, hdv, Tq)
     m = _unfold_q_like(m, B, Hkv, G, nq, bq, 1, Tq)[..., 0]
@@ -281,8 +298,8 @@ def _fwd_impl(q, k, v, q_pos, kv_pos, causal, scale, block_q, block_k,
     return o, m, l
 
 
-def _bwd_impl(q, k, v, q_pos, kv_pos, do, m, dl, causal, scale, block_q,
-              block_k, interpret):
+def _bwd_impl(q, k, v, q_pos, kv_pos, q_start, do, m, dl, causal, scale,
+              block_q, block_k, interpret):
     """dq/dk/dv via the two fused backward grids; all accumulation fp32."""
     B, Tq, H, hdk = q.shape
     S, Hkv = k.shape[1], k.shape[2]
@@ -296,7 +313,8 @@ def _bwd_impl(q, k, v, q_pos, kv_pos, do, m, dl, causal, scale, block_q,
     live = (m > NEG_INF / 2)
     do = jnp.where(live[..., None], do, 0.0)
     dl = jnp.where(live, dl, 0.0)
-    q, k, v, q_pos, kv_pos = _pad_inputs(q, k, v, q_pos, kv_pos, Tqp, Sp)
+    q, k, v, q_pos, kv_pos, q_start = _pad_inputs(
+        q, k, v, q_pos, kv_pos, q_start, Tqp, Sp)
     if Tqp != Tq:
         do = jnp.pad(do, ((0, 0), (0, Tqp - Tq), (0, 0), (0, 0)))
         # padded rows get m = NEG_INF: the safe-row guard zeroes their p
@@ -320,6 +338,7 @@ def _bwd_impl(q, k, v, q_pos, kv_pos, do, m, dl, causal, scale, block_q,
         in_specs=[
             pl.BlockSpec((None, bq), lambda b, i, j: (0, i)),
             pl.BlockSpec((bk,), lambda b, i, j: (j,)),
+            pl.BlockSpec((None, bq), lambda b, i, j, Hkv=Hkv: (b // Hkv, i)),
             pl.BlockSpec((None, None, G * bq, hdk), lambda b, i, j: (b, i, 0, 0)),
             pl.BlockSpec((None, bk, hdk), lambda b, i, j: (b, j, 0)),
             pl.BlockSpec((None, bk, hdv), lambda b, i, j: (b, j, 0)),
@@ -333,7 +352,7 @@ def _bwd_impl(q, k, v, q_pos, kv_pos, do, m, dl, causal, scale, block_q,
                                        jnp.float32),
         scratch_shapes=[pltpu.VMEM((G * bq, hdk), jnp.float32)],
         interpret=interpret,
-    )(qpos_b, kv_pos, qg, kg, vg, dog, mg, dlg)
+    )(qpos_b, kv_pos, q_start, qg, kg, vg, dog, mg, dlg)
 
     # --- dk/dv: transposed grid, q innermost, dk/dv accumulate in scratch
     dk, dv = pl.pallas_call(
@@ -343,6 +362,7 @@ def _bwd_impl(q, k, v, q_pos, kv_pos, do, m, dl, causal, scale, block_q,
         in_specs=[
             pl.BlockSpec((None, bq), lambda b, j, i: (0, i)),
             pl.BlockSpec((bk,), lambda b, j, i: (j,)),
+            pl.BlockSpec((None, bq), lambda b, j, i, Hkv=Hkv: (b // Hkv, i)),
             pl.BlockSpec((None, None, G * bq, hdk), lambda b, j, i: (b, i, 0, 0)),
             pl.BlockSpec((None, bk, hdk), lambda b, j, i: (b, j, 0)),
             pl.BlockSpec((None, bk, hdv), lambda b, j, i: (b, j, 0)),
@@ -363,7 +383,7 @@ def _bwd_impl(q, k, v, q_pos, kv_pos, do, m, dl, causal, scale, block_q,
             pltpu.VMEM((bk, hdv), jnp.float32),
         ],
         interpret=interpret,
-    )(qpos_b, kv_pos, qg, kg, vg, dog, mg, dlg)
+    )(qpos_b, kv_pos, q_start, qg, kg, vg, dog, mg, dlg)
 
     dq = _unfold_q_like(dq, B, Hkv, G, nq, bq, hdk, Tq)
 
@@ -378,35 +398,35 @@ def _bwd_impl(q, k, v, q_pos, kv_pos, do, m, dl, causal, scale, block_q,
 # ---------------------------------------------------------------------------
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6, 7, 8, 9))
-def _flash_partial(q, k, v, q_pos, kv_pos, causal, scale, block_q, block_k,
-                   interpret):
-    return _fwd_impl(q, k, v, q_pos, kv_pos, causal, scale, block_q, block_k,
-                     interpret)
+@functools.partial(jax.custom_vjp, nondiff_argnums=(6, 7, 8, 9, 10))
+def _flash_partial(q, k, v, q_pos, kv_pos, q_start, causal, scale, block_q,
+                   block_k, interpret):
+    return _fwd_impl(q, k, v, q_pos, kv_pos, q_start, causal, scale, block_q,
+                     block_k, interpret)
 
 
-def _flash_partial_fwd(q, k, v, q_pos, kv_pos, causal, scale, block_q,
-                       block_k, interpret):
-    o, m, l = _fwd_impl(q, k, v, q_pos, kv_pos, causal, scale, block_q,
-                        block_k, interpret)
+def _flash_partial_fwd(q, k, v, q_pos, kv_pos, q_start, causal, scale,
+                       block_q, block_k, interpret):
+    o, m, l = _fwd_impl(q, k, v, q_pos, kv_pos, q_start, causal, scale,
+                        block_q, block_k, interpret)
     # (q, k, v, positions, o, m, l): the Type-1 residual set the offload
     # planner budgets.  The recompute-based kernels consume only m (o and l
     # alias the primal outputs, so saving them costs nothing extra on
     # device); the planner may still row-split any of them to pinned_host.
-    return (o, m, l), (q, k, v, q_pos, kv_pos, o, m, l)
+    return (o, m, l), (q, k, v, q_pos, kv_pos, q_start, o, m, l)
 
 
 def _flash_partial_bwd(causal, scale, block_q, block_k, interpret, res, cts):
-    q, k, v, q_pos, kv_pos, _o, m, _l = res
+    q, k, v, q_pos, kv_pos, q_start, _o, m, _l = res
     do, _dm, dl = cts   # the max statistic is gradient-frozen (kernels/ref.py)
-    dq, dk, dv = _bwd_impl(q, k, v, q_pos, kv_pos, do, m, dl, causal, scale,
-                           block_q, block_k, interpret)
+    dq, dk, dv = _bwd_impl(q, k, v, q_pos, kv_pos, q_start, do, m, dl,
+                           causal, scale, block_q, block_k, interpret)
 
     def zero_pos(p):    # int positions: cotangent space is float0
         return np.zeros(np.shape(p), jax.dtypes.float0)
 
     return (dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype),
-            zero_pos(q_pos), zero_pos(kv_pos))
+            zero_pos(q_pos), zero_pos(kv_pos), zero_pos(q_start))
 
 
 _flash_partial.defvjp(_flash_partial_fwd, _flash_partial_bwd)
@@ -414,14 +434,23 @@ _flash_partial.defvjp(_flash_partial_fwd, _flash_partial_bwd)
 
 def flash_attention_partial(q, k, v, q_pos, kv_pos, *, causal=True,
                             scale=None, block_q=128, block_k=128,
-                            interpret=True):
+                            interpret=True, q_start=None):
     """Pallas partial flash attention (differentiable in q, k, v).
 
     q: [B, Tq, H, hd_k]; k: [B, S, Hkv, hd_k]; v: [B, S, Hkv, hd_v]
     q_pos: [Tq] or [B, Tq]; kv_pos: [S]  (2**30 == padding)
+    q_start: optional [B, Tq] or [Tq] segment window — kv slots below
+    q_start are masked (packed-document blocking); None degenerates to the
+    plain positional mask (a zero window changes no visibility bit).
     Returns (o [B,Tq,H,hd_v] f32 un-normalized, m [B,Tq,H] f32, l [B,Tq,H] f32).
     """
     if scale is None:
         scale = 1.0 / (q.shape[-1] ** 0.5)
-    return _flash_partial(q, k, v, q_pos, kv_pos, bool(causal), float(scale),
-                          int(block_q), int(block_k), bool(interpret))
+    B, Tq = q.shape[0], q.shape[1]
+    if q_start is None:
+        q_start = jnp.zeros((B, Tq), jnp.int32)
+    elif q_start.ndim == 1:
+        q_start = jnp.broadcast_to(q_start[None, :], (B, Tq))
+    return _flash_partial(q, k, v, q_pos, kv_pos, q_start, bool(causal),
+                          float(scale), int(block_q), int(block_k),
+                          bool(interpret))

@@ -46,19 +46,22 @@ def backend(name: str):
 
 
 def attention_partial(q, k, v, q_pos, kv_pos, *, causal=True, scale=None,
-                      block_k=512):
+                      block_k=512, q_start=None):
     """Partial flash attention against a local KV shard (see kernels/ref.py).
 
     Dispatches to the Pallas kernel (TPU target / interpret on CPU) or the
     blockwise-jnp path by backend flag.  Both return identical (o, m, l) and
     both differentiate in (q, k, v) — the Pallas path via the fused backward
     kernels' custom_vjp, the jnp path via autodiff of the blockwise scan —
-    with the max statistic m gradient-frozen on both.
+    with the max statistic m gradient-frozen on both.  ``q_start`` is the
+    optional per-query segment window ([B,Tq] or [Tq] int32): only kv slots
+    with kv_pos >= q_start are visible (packed-document blocking).
     """
     if _BACKEND == "pallas":
         on_tpu = jax.default_backend() == "tpu"
         return _fa.flash_attention_partial(
             q, k, v, q_pos, kv_pos, causal=causal, scale=scale,
-            interpret=not on_tpu)
+            q_start=q_start, interpret=not on_tpu)
     return _ref.attention_partial_ref(
-        q, k, v, q_pos, kv_pos, causal=causal, scale=scale, block_k=block_k)
+        q, k, v, q_pos, kv_pos, causal=causal, scale=scale, block_k=block_k,
+        q_start=q_start)

@@ -26,9 +26,12 @@ NEG_INF = -1e30
 
 
 def attention_partial_ref(q, k, v, q_pos, kv_pos, *, causal=True,
-                          scale=None, block_k=512):
+                          scale=None, block_k=512, q_start=None):
     """q: [B,Tq,H,hd_k]; k: [B,S,Hkv,hd_k]; v: [B,S,Hkv,hd_v];
-    q_pos: [B,Tq] or [Tq] int32; kv_pos: [S] int32 (PAD_POS = invalid).
+    q_pos: [B,Tq] or [Tq] int32; kv_pos: [S] int32 (PAD_POS = invalid);
+    q_start: optional [B,Tq] or [Tq] int32 segment window — query i sees only
+    kv slots with kv_pos >= q_start[i] (packed documents never attend across
+    boundaries; PAD_POS rows are fully masked).
 
     Returns (o [B,Tq,H,hd_v] fp32 un-normalized, m [B,Tq,H] fp32, l [B,Tq,H] fp32).
     """
@@ -40,6 +43,8 @@ def attention_partial_ref(q, k, v, q_pos, kv_pos, *, causal=True,
         scale = 1.0 / (hdk ** 0.5)
     if q_pos.ndim == 1:
         q_pos = jnp.broadcast_to(q_pos[None, :], (B, Tq))
+    if q_start is not None and q_start.ndim == 1:
+        q_start = jnp.broadcast_to(q_start[None, :], (B, Tq))
 
     # pad S to a block multiple
     nb = max(1, -(-S // block_k))
@@ -62,6 +67,9 @@ def attention_partial_ref(q, k, v, q_pos, kv_pos, *, causal=True,
         if causal:
             valid = valid & (q_pos[:, :, None, None, None]
                              >= pblk[None, None, None, None, :])
+        if q_start is not None:
+            valid = valid & (pblk[None, None, None, None, :]
+                             >= q_start[:, :, None, None, None])
         s = jnp.where(valid, s, NEG_INF)
         m_blk = jnp.max(s, axis=-1)
         # the max statistic is gradient-frozen (jax.nn.softmax-style): its
@@ -110,7 +118,8 @@ def normalize(o, l):
     return (o / jnp.maximum(l, 1e-30)[:, :, :, None])
 
 
-def mha_reference(q, k, v, q_pos, kv_pos, *, causal=True, scale=None):
+def mha_reference(q, k, v, q_pos, kv_pos, *, causal=True, scale=None,
+                  q_start=None):
     """Naive full attention (small shapes only) — oracle for the oracle."""
     B, Tq, H, hdk = q.shape
     Hkv = k.shape[2]
@@ -119,11 +128,16 @@ def mha_reference(q, k, v, q_pos, kv_pos, *, causal=True, scale=None):
         scale = 1.0 / (hdk ** 0.5)
     if q_pos.ndim == 1:
         q_pos = jnp.broadcast_to(q_pos[None, :], (B, Tq))
+    if q_start is not None and q_start.ndim == 1:
+        q_start = jnp.broadcast_to(q_start[None, :], (B, Tq))
     qf = q.astype(jnp.float32).reshape(B, Tq, Hkv, G, hdk)
     s = jnp.einsum("btkgh,bskh->btkgs", qf, k.astype(jnp.float32)) * scale
     valid = (kv_pos != 2**30)[None, None, None, None, :]
     if causal:
         valid = valid & (q_pos[:, :, None, None, None] >= kv_pos[None, None, None, None, :])
+    if q_start is not None:
+        valid = valid & (kv_pos[None, None, None, None, :]
+                        >= q_start[:, :, None, None, None])
     s = jnp.where(valid, s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
     p = jnp.where(jnp.all(~valid, axis=-1, keepdims=True), 0.0, p)

@@ -84,11 +84,14 @@ def _pick_mode(ctx: Ctx, q, k_loc, kv_view) -> str:
 
 
 def dist_attention(q, k_loc, v_loc, q_pos, kv_pos, ctx: Ctx, *, causal=True,
-                   scale=None, kv_view: Optional[int] = None):
+                   scale=None, kv_view: Optional[int] = None, q_start=None):
     """q: [B, Tq_loc, H, hd] this rank's query shard (all heads).
     k_loc/v_loc/kv_pos: the local KV shard (cache view).
     kv_view: static number of leading cache slots to attend over (compile-time
     truncation for chunked training; None = full buffer).
+    q_start: optional [B, Tq_loc] int32 segment window for packed batches —
+    each query sees only kv slots with kv_pos >= its document start, so
+    packed documents never attend across boundaries (PAD on padding rows).
     Returns the attention output for this rank's query shard
     [B, Tq_loc, H, hd_v].
     """
@@ -98,13 +101,15 @@ def dist_attention(q, k_loc, v_loc, q_pos, kv_pos, ctx: Ctx, *, causal=True,
     mode = _pick_mode(ctx, q, k_loc, kv_view)
     if mode == "gather_kv" and ctx.sp > 1:
         # gather the (narrow, GQA) KV shard; attention is then fully local
-        # to this rank's query rows — zero merge collectives.
+        # to this rank's query rows — zero merge collectives.  q_start is
+        # query-side, so the local shard passes straight through.
         k_full = ctx.all_gather_model(k_loc, axis=1)
         v_full = ctx.all_gather_model(v_loc, axis=1)
         kp_full = ctx.all_gather_model(kv_pos, axis=0)
         qp = q_pos if q_pos.ndim == 1 else q_pos[0]
         o, m, l = kops.attention_partial(q, k_full, v_full, qp, kp_full,
-                                         causal=causal, scale=scale)
+                                         causal=causal, scale=scale,
+                                         q_start=q_start)
         out = o / jnp.maximum(l, 1e-30)[..., None]
         return out.astype(q.dtype)
 
@@ -113,8 +118,11 @@ def dist_attention(q, k_loc, v_loc, q_pos, kv_pos, ctx: Ctx, *, causal=True,
         qp_full = ctx.all_gather_model(q_pos, axis=0)
     else:
         qp_full = ctx.all_gather_model(q_pos, axis=1)
+    qs_full = (None if q_start is None
+               else ctx.all_gather_model(q_start, axis=1))
     o, m, l = kops.attention_partial(q_full, k_loc, v_loc, qp_full, kv_pos,
-                                     causal=causal, scale=scale)
+                                     causal=causal, scale=scale,
+                                     q_start=qs_full)
     # cross-shard softmax merge; scatter back to this rank's query rows.
     # max stats are gradient-frozen (see kernels/ref.py).
     m = jax.lax.stop_gradient(m)
@@ -135,12 +143,14 @@ def dist_attention(q, k_loc, v_loc, q_pos, kv_pos, ctx: Ctx, *, causal=True,
 
 
 def gqa_self_attention(x, p, cfg, ctx: Ctx, cache: KVCache, q_pos,
-                       cache_offset, kv_view, *, name_tag=None):
+                       cache_offset, kv_view, *, name_tag=None,
+                       q_start=None):
     """x: [B, T_loc, d]; returns (attn_out [B, T_loc, d], new cache).
 
     q_pos: [T_loc] global positions of this rank's tokens in the chunk.
     cache_offset: local cache slot where this chunk's shard is written.
     kv_view: static visible cache length after the append.
+    q_start: optional [B, T_loc] packed-document window (see dist_attention).
     """
     B, Tl, _ = x.shape
     H, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
@@ -159,7 +169,7 @@ def gqa_self_attention(x, p, cfg, ctx: Ctx, cache: KVCache, q_pos,
         q, k, v = name_tag(q), name_tag(k), name_tag(v)
     cache = cache_append(cache, k, v, q_pos, cache_offset)
     out = dist_attention(q, cache.k, cache.v, q_pos, cache.pos, ctx,
-                         causal=True, kv_view=kv_view)
+                         causal=True, kv_view=kv_view, q_start=q_start)
     out = out.reshape(B, Tl, H * hd)
     if name_tag is not None:
         out = name_tag(out)
@@ -223,7 +233,8 @@ def gqa_decode_attention(x, p, cfg, ctx: Ctx, cache: KVCache, step_pos,
 
 
 def mla_attention(x, p, cfg, ctx: Ctx, cache: KVCache, q_pos, cache_offset,
-                  kv_view, *, name_tag=None, decode=False, my_slot=None):
+                  kv_view, *, name_tag=None, decode=False, my_slot=None,
+                  q_start=None):
     """Multi-head latent attention.  The cache stores the compressed latent
     kv = [c_kv (kv_lora) | k_rope (rope_hd)] per token — MLA's memory edge.
     Scores use the absorbed form: q_eff = [q_nope @ W_uk | q_rope], shared
@@ -286,7 +297,7 @@ def mla_attention(x, p, cfg, ctx: Ctx, cache: KVCache, q_pos, cache_offset,
         kv = cache.k[:, :kv_view]
         out = dist_attention(q_eff, kv, kv[..., :dc], q_pos,
                              cache.pos[:kv_view], ctx, causal=True,
-                             scale=scale)
+                             scale=scale, q_start=q_start)
     # up-project latent values per head then output proj
     o_v = jnp.einsum("bthc,hcv->bthv", out, p["w_uv"])     # [B,T,H,dv]
     if name_tag is not None:

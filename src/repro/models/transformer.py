@@ -37,6 +37,9 @@ class ChunkMeta(NamedTuple):
     # (off, keep) checkpoint names the tag uses — per-tick qualified in the
     # pipeline loops so the memledger can attribute saved bytes exactly
     names: Any = (offload_mod.OFF_NAME, offload_mod.KEEP_NAME)
+    # packed variable-length batches: [B, T_loc] int32 document-start window
+    # per query token (attention masks kv_pos < q_start); None = unpacked
+    q_start: Any = None
 
 
 ZERO = jnp.float32(0.0)
@@ -61,7 +64,8 @@ def dense_slot(cfg, p, s, x, ctx: Ctx, meta: ChunkMeta, extras=None):
     else:
         a, kv = A.gqa_self_attention(h, p["attn"], cfg, ctx, s["kv"],
                                      meta.q_pos, meta.cache_off, meta.kv_view,
-                                     name_tag=meta.tag)
+                                     name_tag=meta.tag,
+                                     q_start=meta.q_start)
     x = _res(x, a, p["gate"])
     h2 = L.apply_norm(x, p["ln2"], cfg.norm)
     m = L.mlp(h2, p["mlp"], cfg.act, name_tag=meta.tag)
@@ -80,14 +84,16 @@ def moe_slot(cfg, p, s, x, ctx: Ctx, meta: ChunkMeta, extras=None):
         a, kv = A.mla_attention(h, p["attn"], cfg, ctx, s["kv"], meta.q_pos,
                                 meta.cache_off, meta.kv_view,
                                 name_tag=meta.tag, decode=meta.decode,
-                                my_slot=meta.my_slot)
+                                my_slot=meta.my_slot,
+                                q_start=meta.q_start)
     elif meta.decode:
         a, kv = A.gqa_decode_attention(h, p["attn"], cfg, ctx, s["kv"],
                                        meta.q_pos[0], meta.my_slot)
     else:
         a, kv = A.gqa_self_attention(h, p["attn"], cfg, ctx, s["kv"],
                                      meta.q_pos, meta.cache_off, meta.kv_view,
-                                     name_tag=meta.tag)
+                                     name_tag=meta.tag,
+                                     q_start=meta.q_start)
     x = _res(x, a, p["gate"])
     h2 = L.apply_norm(x, p["ln2"], cfg.norm)
     m, aux = M.moe_block(h2, p["moe"], cfg, ctx, name_tag=meta.tag)
@@ -113,7 +119,8 @@ def vlm_group_slot(cfg, p, s, x, ctx: Ctx, meta: ChunkMeta, extras=None):
         else:
             a, kv = A.gqa_self_attention(h, pi["attn"], cfg, ctx, si,
                                          meta.q_pos, meta.cache_off,
-                                         meta.kv_view, name_tag=meta.tag)
+                                         meta.kv_view, name_tag=meta.tag,
+                                         q_start=meta.q_start)
         x = _res(x, a, pi["gate"])
         h2 = L.apply_norm(x, pi["ln2"], cfg.norm)
         m = L.mlp(h2, pi["mlp"], cfg.act, name_tag=meta.tag)
@@ -156,7 +163,8 @@ def zamba_group_slot(cfg, p, s, x, ctx: Ctx, meta: ChunkMeta, extras=None):
     else:
         a, kv = A.gqa_self_attention(h, sp_["attn"], cfg, ctx, s["shared_kv"],
                                      meta.q_pos, meta.cache_off, meta.kv_view,
-                                     name_tag=meta.tag)
+                                     name_tag=meta.tag,
+                                     q_start=meta.q_start)
     x = _res(x, a, p["gate_shared"])
     h2 = L.apply_norm(x, sp_["ln2"], cfg.norm)
     m = L.mlp(h2, sp_["mlp"], cfg.act, name_tag=meta.tag)
@@ -197,7 +205,8 @@ def whisper_dec_slot(cfg, p, s, x, ctx: Ctx, meta: ChunkMeta, extras=None):
     else:
         a, kv = A.gqa_self_attention(h, p["attn"], cfg, ctx, s["kv"],
                                      meta.q_pos, meta.cache_off, meta.kv_view,
-                                     name_tag=meta.tag)
+                                     name_tag=meta.tag,
+                                     q_start=meta.q_start)
     x = _res(x, a, p["gate"])
     hx = L.apply_norm(x, p["xln"], cfg.norm)
     a2 = A.cross_attention(hx, p["xattn"], cfg, ctx, s["xkv"],

@@ -72,10 +72,19 @@ class Cell:
     sched: part.ChunkSchedule
     alphas: tuple
     dtype: Any = jnp.bfloat16
+    # document lengths of the packed variable-length batch (empty = the
+    # classic uniform layout).  When set, the batch carries a ``doc_start``
+    # array and the attention path masks cross-document visibility
+    # (DESIGN.md §13).
+    doc_lens: tuple = ()
 
     @property
     def cfg(self) -> ModelConfig:
         return self.mdef.cfg
+
+    @property
+    def varlen(self) -> bool:
+        return bool(self.doc_lens)
 
     @property
     def b_loc(self) -> int:
@@ -101,13 +110,16 @@ class Cell:
 
 
 def resolve_cell(arch, shape_cfg: ShapeConfig, *, data_size=16, model_size=16,
-                 pods=1, overrides=None, hw=cm.V5E) -> Cell:
+                 pods=1, overrides=None, hw=cm.V5E, doc_lens=None) -> Cell:
     mdef = arch if isinstance(arch, ModelDef) else build_model(arch)
     cfg = mdef.cfg
     plan = resolve_plan(cfg, shape_cfg, data_size=data_size,
                         model_size=model_size, pods=pods, overrides=overrides)
     n = plan.n_chunks
+    doc_lens = tuple(int(x) for x in
+                     (doc_lens if doc_lens is not None else ()))
     if shape_cfg.kind == "decode":
+        assert not doc_lens, "packed varlen layouts are train/prefill-only"
         # decode has no backward pass: there is no reload window to hide a
         # transfer under, so an offloaded residual could only ever be paid
         # for, never redeemed.  resolve_plan pins offload off for decode
@@ -120,6 +132,23 @@ def resolve_cell(arch, shape_cfg: ShapeConfig, *, data_size=16, model_size=16,
     else:
         mult = max(model_size, 128) if plan.pp == 1 else model_size
         policy = plan.partition if plan.pp == 1 else "length"
+        r = part.flops_per_token_ratio(cfg)
+        profile = None
+        if doc_lens:
+            # histogram-driven packed layout: the cost profile sums the
+            # per-row causal sawtooth (cost restarts at every document
+            # boundary) over the whole global batch, so chunk boundaries
+            # and offload ratios below see the *actual* token/FLOPs mix.
+            rows = part.pack_lengths(list(doc_lens), shape_cfg.seq_len)
+            row_lens = [[doc_lens[i] for i in row] for row in rows]
+            assert len(row_lens) <= shape_cfg.global_batch, (
+                f"packing needs {len(row_lens)} rows > global_batch "
+                f"{shape_cfg.global_batch}")
+            # filler rows up to the global batch are all-padding but still
+            # ride the dense matmuls: linear-only cost
+            row_lens += [[] for _ in
+                         range(shape_cfg.global_batch - len(row_lens))]
+            profile = part.packed_cost_profile(row_lens, shape_cfg.seq_len, r)
         if plan.pp > 1:
             assert shape_cfg.seq_len % (n * model_size) == 0
             if plan.msp:
@@ -136,13 +165,25 @@ def resolve_cell(arch, shape_cfg: ShapeConfig, *, data_size=16, model_size=16,
                     "state updates are not idempotent under full-chunk "
                     "recompute")
             sched = part.partition_length(shape_cfg.seq_len, n)
+        elif profile is not None and policy == "flops":
+            # Seq1F1B-style FLOPs balance over the packed profile, snapping
+            # to aligned document boundaries where one is nearby
+            sched = part.partition_profile(
+                profile, n, multiple=mult,
+                doc_bounds=part.aligned_doc_bounds(row_lens,
+                                                   shape_cfg.seq_len))
         else:
             sched = part.partition(shape_cfg.seq_len, n, cfg, policy,
                                    multiple=mult)
-        # sequence-aware offload ratios from the cost model (§5.2)
+        # sequence-aware offload ratios from the cost model (§5.2); packed
+        # cells use the measured per-chunk profile sums (already summed over
+        # the batch rows), uniform cells the analytic single-sequence costs
         n_params = SP.count_active_params(mdef, plan.pp, data_size)
-        r = part.flops_per_token_ratio(cfg)
-        costs = part.chunk_costs(sched, r)
+        if profile is not None:
+            costs = [c / max(1, shape_cfg.global_batch)
+                     for c in part.profile_chunk_costs(profile, sched)]
+        else:
+            costs = part.chunk_costs(sched, r)
         scale = (6 * n_params * shape_cfg.global_batch * shape_cfg.seq_len
                  / sum(costs) / (plan.sp * plan.pp * hw.peak_flops_bf16))
         # the §5.2 hiding window is the next chunk's *forward* compute —
@@ -158,7 +199,7 @@ def resolve_cell(arch, shape_cfg: ShapeConfig, *, data_size=16, model_size=16,
             alphas = tuple(0.0 for _ in alphas)
     return Cell(mdef=mdef, plan=plan, shape=shape_cfg, pods=pods,
                 data_size=data_size, model_size=model_size,
-                sched=sched, alphas=alphas)
+                sched=sched, alphas=alphas, doc_lens=doc_lens)
 
 
 # ---------------------------------------------------------------------------
@@ -197,7 +238,7 @@ def use_ahead_prefetch(plan: ParallelPlan, *, train: bool) -> bool:
 
 
 def prefetch_chunk(cell: Cell, ctx: Ctx, *, alpha: float, names: tuple,
-                   q_pos, cache_off, kv_view: int):
+                   q_pos, cache_off, kv_view: int, q_start=None):
     """The prefetch='ahead' seam for one tick/chunk (DESIGN.md §12).
 
     Returns ``run(stage_p, g, state, x, link_in) -> (y, state', aux,
@@ -223,7 +264,7 @@ def prefetch_chunk(cell: Cell, ctx: Ctx, *, alpha: float, names: tuple,
     off_name, keep_name = names
     kind = hostmem.resolve_host_kind("auto")
     meta = ChunkMeta(q_pos=q_pos, cache_off=cache_off, kv_view=kv_view,
-                     tag=None, names=names)
+                     tag=None, names=names, q_start=q_start)
 
     def capture(stage_p, g, state, x):
         y, s2, aux, off_acts, keep_acts = mdef.stage_apply_capture(
@@ -323,8 +364,14 @@ def pipeline_tick_trace(cell: Cell):
 
 def run_pipeline(cell: Cell, ctx: Ctx, stage_p, g, tokens, labels, context,
                  *, with_loss: bool, collect_state: bool = False,
-                 ledger=None):
+                 ledger=None, doc_start=None):
     """tokens/labels: [B_loc, S] local; context: [B_loc, Nctx_loc, d] or None.
+
+    doc_start: optional [B_loc, S] int32 — global start position of the
+    document containing each token (PAD_START on padding) for packed
+    variable-length batches; threaded to attention as the per-query segment
+    window so packed documents never attend across boundaries.  Loss tokens
+    are selected by the label sentinel (labels < 0 carry zero weight).
 
     ledger: optional runtime.memledger.MemLedger — inserts per-tick probes
     (fwd/bwd wall-clock + execution order) on the compute path.
@@ -362,19 +409,30 @@ def run_pipeline(cell: Cell, ctx: Ctx, stage_p, g, tokens, labels, context,
             lloc = ln // sp
             ids = jax.lax.slice_in_dim(tokens, off, off + ln, axis=1)
             q_pos = chunk_positions(off, lloc)
+            ds_loc = None
+            if doc_start is not None:
+                # local shard of the chunk's segment window: embed's
+                # reduce-scatter makes the local rows the rank's contiguous
+                # [off + rank*lloc, off + (rank+1)*lloc) slice, so slice the
+                # per-token doc_start the same way
+                ds_chunk = jax.lax.slice_in_dim(doc_start, off, off + ln,
+                                                axis=1)
+                ds_loc = jax.lax.dynamic_slice_in_dim(
+                    ds_chunk, rank * lloc, lloc, axis=1)
             x = mdef.embed(g, ids, q_pos, ctx)
             if ahead:
                 run = prefetch_chunk(cell, ctx, alpha=cell.alphas[c],
                                      names=ofl.chunk_names(f"@c{c}"),
                                      q_pos=q_pos, cache_off=off // sp,
-                                     kv_view=(off + ln) // sp)
+                                     kv_view=(off + ln) // sp,
+                                     q_start=ds_loc)
                 x, state, aux, link = run(stage_p, g, state, x, link)
             else:
                 tag, names = chunk_tag(cell, c, suffix=f"@c{c}",
                                        train=with_loss)
                 meta = ChunkMeta(q_pos=q_pos, cache_off=off // sp,
                                  kv_view=(off + ln) // sp,
-                                 tag=tag, names=names)
+                                 tag=tag, names=names, q_start=ds_loc)
                 x, state, aux = mdef.stage_apply(
                     stage_p, state, x, ctx, meta, g,
                     offload=plan.offload, remat=plan.remat,
@@ -385,8 +443,11 @@ def run_pipeline(cell: Cell, ctx: Ctx, stage_p, g, tokens, labels, context,
             aux_acc = aux_acc + aux
             if with_loss:
                 lab = jax.lax.slice_in_dim(labels, off, off + ln, axis=1)
-                ls, cnt = mdef.head_loss(g, x, lab,
-                                         jnp.ones_like(lab, jnp.float32), ctx)
+                # the label sentinel (<0) zero-weights padding and each
+                # document's last token; uniform batches have no sentinel
+                # labels, so this is the same all-ones weighting as before
+                wts = (lab >= 0).astype(jnp.float32)
+                ls, cnt = mdef.head_loss(g, x, lab, wts, ctx)
                 loss_acc, den_acc = loss_acc + ls, den_acc + cnt
             x_last = x
         loss_acc = link_drain(loss_acc, link)
@@ -425,20 +486,28 @@ def run_pipeline(cell: Cell, ctx: Ctx, stage_p, g, tokens, labels, context,
         c_my = chunk_arr[e_my]
         off_my = c_my * clen
         q_pos = chunk_positions(off_my, lloc)
+        ds_loc = None
+        if doc_start is not None:
+            # this stage's chunk offset is traced (off_my), so take the
+            # local segment window with a dynamic slice; drain ticks clamp
+            # harmlessly (their output is masked out below)
+            ds_loc = jax.lax.dynamic_slice_in_dim(
+                doc_start, off_my + rank * lloc, lloc, axis=1)
         # tick-aligned offload ratio: the SPMD program is uniform across
         # stages, so every stage tags with the fed event's deployed alpha
         if ahead:
             run = prefetch_chunk(cell, ctx, alpha=cell.alphas[events[e_new][0]],
                                  names=ofl.chunk_names(f"@t{t}"),
                                  q_pos=q_pos, cache_off=c_my * lloc,
-                                 kv_view=min(events[e_new][0] + 1, N) * lloc)
+                                 kv_view=min(events[e_new][0] + 1, N) * lloc,
+                                 q_start=ds_loc)
             x_out, state, aux, link = run(stage_p, g, state, h, link)
         else:
             tag, names = chunk_tag(cell, events[e_new][0], suffix=f"@t{t}",
                                    train=with_loss)
             meta = ChunkMeta(q_pos=q_pos, cache_off=c_my * lloc,
                              kv_view=min(events[e_new][0] + 1, N) * lloc,
-                             tag=tag, names=names)
+                             tag=tag, names=names, q_start=ds_loc)
             x_out, state, aux = mdef.stage_apply(
                 stage_p, state, h, ctx, meta, g,
                 offload=plan.offload, remat=plan.remat,
@@ -459,7 +528,8 @@ def run_pipeline(cell: Cell, ctx: Ctx, stage_p, g, tokens, labels, context,
             pos_in = jnp.arange(clen)
             mask = ((pos_in >= sub_l * sublen)
                     & (pos_in < (sub_l + 1) * sublen)).astype(jnp.float32)
-            wts = jnp.broadcast_to(mask[None, :], lab.shape)
+            wts = (jnp.broadcast_to(mask[None, :], lab.shape)
+                   * (lab >= 0).astype(jnp.float32))
             ls, cnt = mdef.head_loss(g, x_out, lab, wts, ctx)
             is_last = (stage == pp - 1).astype(jnp.float32)
             loss_acc = loss_acc + is_last * ls
@@ -496,6 +566,10 @@ def batch_struct(cell: Cell):
         tok_spec = P("pod", "data") if pods > 1 else P(None, "data")
         sp_["tokens"] = tok_spec
         sp_["labels"] = tok_spec
+        if cell.varlen:
+            st["doc_start"] = jax.ShapeDtypeStruct(lead + (B_loc, S),
+                                                   jnp.int32)
+            sp_["doc_start"] = tok_spec
     if cfg.cross_attn is not None:
         n_ctx = (cfg.n_frames if cfg.encoder_layers
                  else cfg.cross_attn.n_context_tokens)
@@ -532,10 +606,13 @@ def make_train_step(cell: Cell, mesh, *, lr_kwargs=None, ledger=None):
         labels = _squeeze_lead(batch["labels"], 2)
         context = (_squeeze_lead(batch["context"], 2)
                    if "context" in batch else None)
+        doc_start = (_squeeze_lead(batch["doc_start"], 2)
+                     if "doc_start" in batch else None)
 
-        def loss_fn(stage_p, g, tok, lab, ctxt):
+        def loss_fn(stage_p, g, tok, lab, ctxt, ds):
             out = run_pipeline(cell, ctx, stage_p, g, tok, lab, ctxt,
-                               with_loss=True, ledger=ledger)
+                               with_loss=True, ledger=ledger,
+                               doc_start=ds if cell.varlen else None)
             num = ctx.psum_loss_all(out["loss"])
             den = ctx.psum_loss_all(out["denom"])
             aux = ctx.psum_loss_all(out["aux"])
@@ -553,12 +630,14 @@ def make_train_step(cell: Cell, mesh, *, lr_kwargs=None, ledger=None):
             lbs = labels.reshape(A, Bm, -1)
             cxs = (context.reshape((A, Bm) + context.shape[1:])
                    if context is not None else None)
+            dss = (doc_start.reshape(A, Bm, -1)
+                   if doc_start is not None else None)
 
             def acc_step(carry, xs):
                 gsum, lsum = carry
-                tok, lab, cx = xs
+                tok, lab, cx, ds = xs
                 l, gr = jax.value_and_grad(loss_fn, argnums=(0, 1))(
-                    stage_p, g, tok, lab, cx)
+                    stage_p, g, tok, lab, cx, ds)
                 gsum = jax.tree_util.tree_map(
                     lambda a, b: a + b.astype(a.dtype), gsum, gr)
                 return (gsum, lsum + l), None
@@ -567,12 +646,13 @@ def make_train_step(cell: Cell, mesh, *, lr_kwargs=None, ledger=None):
                 lambda p: jnp.zeros(p.shape, jnp.float32), (stage_p, g))
             (grads, loss), _ = jax.lax.scan(
                 acc_step, (zeros, jnp.float32(0.0)),
-                (tks, lbs, cxs if cxs is not None else jnp.zeros((A, Bm))))
+                (tks, lbs, cxs if cxs is not None else jnp.zeros((A, Bm)),
+                 dss if dss is not None else jnp.zeros((A, Bm))))
             loss = loss / A
             grads = jax.tree_util.tree_map(lambda a: a / A, grads)
         else:
             loss, grads = jax.value_and_grad(loss_fn, argnums=(0, 1))(
-                stage_p, g, tokens, labels, context)
+                stage_p, g, tokens, labels, context, doc_start)
         # stage grads reduce over dp replicas; global grads over all stages
         g_stage = ctx.psum_grads(grads[0])
         g_glob = ctx.psum_globals(grads[1])

@@ -523,7 +523,7 @@ def _drain_callbacks() -> None:
 
 
 def build_step(cell, *, data_size: int, model_size: int, tokens=None,
-               labels=None, seed: int = 0, ledger=None,
+               labels=None, doc_start=None, seed: int = 0, ledger=None,
                with_grad: bool = True):
     """The shared shard_map'd step scaffold over `cell`'s mesh layout:
     params stacked stage-major, the dp-major batch layout, and the
@@ -550,6 +550,17 @@ def build_step(cell, *, data_size: int, model_size: int, tokens=None,
         lambda *ls: jnp.stack([ls[i % plan.pp] for i in range(data_size)]),
         *stages)
     gl = mdef.init_globals(key, cell.dtype)
+    if cell.varlen and tokens is None:
+        # deterministic packed batch from the cell's document histogram:
+        # the same corpus the budget-cell / varlen tests run against
+        from repro.data import pipeline as dpipe
+
+        pb = dpipe.packed_batch_for(cell.doc_lens, cell.shape.seq_len,
+                                    rows=cell.b_loc * plan.dp,
+                                    vocab_size=cfg.vocab_size, seed=seed)
+        tokens = jnp.asarray(pb.tokens)
+        labels = jnp.asarray(pb.labels)
+        doc_start = jnp.asarray(pb.doc_start)
     if tokens is None:
         tokens = jax.random.randint(
             key, (cell.b_loc * plan.dp, cell.shape.seq_len), 0,
@@ -564,6 +575,9 @@ def build_step(cell, *, data_size: int, model_size: int, tokens=None,
                           for i in range(data_size)])[None]
 
     batch = {"tokens": lay(tokens), "labels": lay(labels)}
+    if cell.varlen:
+        assert doc_start is not None, "varlen cell needs a doc_start array"
+        batch["doc_start"] = lay(jnp.asarray(doc_start))
     pspecs = _in_specs_for_params(cell)
     _, bspecs = batch_struct(cell)
 
@@ -573,10 +587,13 @@ def build_step(cell, *, data_size: int, model_size: int, tokens=None,
             lambda a: a.reshape(a.shape[1:]), stage_p)
         tok = b["tokens"].reshape(b["tokens"].shape[2:])
         lab = b["labels"].reshape(b["labels"].shape[2:])
+        ds = (b["doc_start"].reshape(b["doc_start"].shape[2:])
+              if "doc_start" in b else None)
 
         def loss(stage_p, g):
             out = run_pipeline(cell, ctx, stage_p, g, tok, lab,
-                               None, with_loss=True, ledger=ledger)
+                               None, with_loss=True, ledger=ledger,
+                               doc_start=ds)
             num = ctx.psum_loss_all(out["loss"])
             den = ctx.psum_loss_all(out["denom"])
             return num / jnp.maximum(den, 1.0)
@@ -715,7 +732,8 @@ def _measure_opt(cell, ledger: MemLedger, params, grads) -> None:
 
 def measure(cell, *, data_size: int, model_size: int, seed: int = 0,
             baseline: bool = True, opt: bool = False,
-            d2h_bw: Optional[float] = None) -> MemLedger:
+            d2h_bw: Optional[float] = None, tokens=None, labels=None,
+            doc_start=None) -> MemLedger:
     """Execute one real train-grad step of `cell` on an emulated mesh with
     the ledger attached, measure the tagged bytes from the traced jaxpr,
     and (optionally) time an offload-off baseline for the exposed-transfer
@@ -734,7 +752,8 @@ def measure(cell, *, data_size: int, model_size: int, seed: int = 0,
     plan = cell.plan
     assert plan.grad_accum == 1, "measure() needs grad_accum == 1"
     ledger = MemLedger()
-    mk = dict(data_size=data_size, model_size=model_size, seed=seed)
+    mk = dict(data_size=data_size, model_size=model_size, seed=seed,
+              tokens=tokens, labels=labels, doc_start=doc_start)
     fn_grad, args = build_step(cell, ledger=ledger, with_grad=True, **mk)
     fn_fwd, _ = build_step(cell, ledger=None, with_grad=False, **mk)
 

@@ -1,0 +1,419 @@
+"""Packed variable-length scheduling (DESIGN.md §13).
+
+Four layers of law:
+
+  1. partition boundary hygiene — `partition_length` / `partition_flops` /
+     `partition_profile` neither drop nor duplicate tokens for ANY
+     (seq_len, n, multiple), including n*multiple > seq_len and
+     seq_len % multiple != 0 (hypothesis);
+  2. the packer is a permutation-free partition — every document lands
+     contiguously in exactly one row, the token multiset is preserved, and
+     the q_start window mask equals the seg-id mask (documents never attend
+     across boundaries); `shard_batch` round-trips the packed layout;
+  3. kernel parity — the Pallas flash kernel and the blockwise-jnp
+     reference agree on the q_start segment window, forward and grads,
+     including fully-padded (dead) query rows;
+  4. oracle equality — packed loss AND grads match the pad-to-max oracle
+     (one doc per row at its packed offsets: bit-identical positions) at
+     pp=1 and pp=2, fp32 <= 1e-5; and the varlen budget cell's measured
+     ledger peak is bracketed by the simulator's prediction.
+"""
+import dataclasses
+from collections import Counter
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import ShapeConfig, get_config
+from repro.core import partition as part
+from repro.data import pipeline as dpipe
+from repro.models.model_zoo import build_model
+from repro.parallel.ctx import SINGLE
+from repro.parallel.runner import resolve_cell, run_pipeline
+
+
+# ---------------------------------------------------------------------------
+# 1. partition boundary hygiene (the satellite bugfix pin)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=120, deadline=None)
+@given(st.integers(1, 4096), st.integers(1, 32),
+       st.sampled_from([1, 2, 8, 16, 128]))
+def test_partition_length_never_drops_tokens(seq_len, n, multiple):
+    sched = part.partition_length(seq_len, n, multiple)
+    assert sum(sched.lengths) == seq_len
+    assert all(l > 0 for l in sched.lengths)
+    assert sched.offsets == tuple(
+        sum(sched.lengths[:i]) for i in range(sched.n))
+    # feasibility clamp: never more chunks than multiple-sized slots
+    assert sched.n <= max(1, min(n, seq_len // multiple))
+    if sched.n > 1:
+        # every chunk except the remainder-absorbing last is aligned
+        assert all(l % multiple == 0 for l in sched.lengths[:-1])
+
+
+@settings(max_examples=120, deadline=None)
+@given(st.integers(1, 4096), st.integers(1, 32),
+       st.sampled_from([1, 2, 8, 16, 128]),
+       st.floats(0.001, 2.0))
+def test_partition_flops_never_drops_tokens(seq_len, n, multiple, r):
+    sched = part.partition_flops(seq_len, n, r, multiple)
+    assert sum(sched.lengths) == seq_len
+    assert all(l > 0 for l in sched.lengths)
+    if sched.n > 1:
+        # interior boundaries are multiple-aligned (sequence-shard
+        # divisibility); the last chunk absorbs the remainder
+        for off in sched.offsets[1:]:
+            assert off % multiple == 0
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.integers(8, 1024), st.integers(1, 16),
+       st.sampled_from([1, 2, 8]), st.floats(0.0, 1.0))
+def test_partition_profile_never_drops_tokens(seq_len, n, multiple, r):
+    rng = np.random.default_rng(seq_len * 31 + n)
+    profile = 1.0 + r * rng.random(seq_len)
+    sched = part.partition_profile(profile, n, multiple)
+    assert sum(sched.lengths) == seq_len
+    assert all(l > 0 for l in sched.lengths)
+    for off in sched.offsets[1:]:
+        assert off % multiple == 0
+
+
+def test_partition_profile_snaps_to_doc_bounds():
+    # uniform profile balances at multiples of 64; a doc boundary 6 tokens
+    # off must win (it costs bounded imbalance, saves a split document)
+    profile = np.ones(256)
+    sched = part.partition_profile(profile, 4, 2, doc_bounds=[58, 198])
+    assert 58 in sched.offsets
+    # far-away doc bounds (outside the window) are NOT taken
+    sched2 = part.partition_profile(profile, 4, 2, doc_bounds=[10])
+    assert 10 not in sched2.offsets
+
+
+def test_profile_chunk_costs_cover_profile():
+    prof = np.arange(1, 65, dtype=np.float64)
+    sched = part.partition_profile(prof, 4, 1)
+    costs = part.profile_chunk_costs(prof, sched)
+    np.testing.assert_allclose(sum(costs), prof.sum())
+
+
+# ---------------------------------------------------------------------------
+# 2. the packer is a permutation-free partition
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(1, 40), st.sampled_from([64, 96, 256]),
+       st.sampled_from(["zipf", "lognormal"]), st.integers(0, 5))
+def test_packer_preserves_token_multiset(n_docs, seq_len, dist, seed):
+    docs = dpipe.sample_corpus(n_docs, vocab_size=97, seed=seed, dist=dist,
+                               mean_len=24, max_len=seq_len)
+    pb = dpipe.pack_documents(docs, seq_len)
+    # every doc contiguous in exactly one row, bytes equal
+    assert sorted(di for (_, _, _, di) in pb.spans) == list(range(n_docs))
+    for row, s, e, di in pb.spans:
+        np.testing.assert_array_equal(pb.tokens[row, s:e], docs[di])
+        assert (pb.seg_ids[row, s:e] == di).all()
+        assert (pb.doc_start[row, s:e] == s).all()
+    # token multiset preserved: nothing dropped, nothing duplicated
+    got = Counter(pb.tokens[pb.seg_ids >= 0].tolist())
+    want = Counter(np.concatenate(docs).tolist())
+    assert got == want
+    # padding slots carry the sentinels
+    pad = pb.seg_ids < 0
+    assert (pb.doc_start[pad] == dpipe.PAD_START).all()
+    assert (pb.labels[pad] == dpipe.IGNORE_LABEL).all()
+    # labels: in-document shift; each doc's last token is ignored
+    for row, s, e, di in pb.spans:
+        np.testing.assert_array_equal(pb.labels[row, s:e - 1], docs[di][1:])
+        assert pb.labels[row, e - 1] == dpipe.IGNORE_LABEL
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(2, 24), st.integers(0, 3))
+def test_qstart_window_equals_segment_mask(n_docs, seed):
+    """The q_start window (what attention executes) and the seg-id equality
+    mask (the definition) select identical visibility: packed documents
+    never attend across boundaries, padding attends to nothing."""
+    S = 128
+    docs = dpipe.sample_corpus(n_docs, vocab_size=97, seed=seed,
+                               mean_len=24, max_len=S)
+    pb = dpipe.pack_documents(docs, S)
+    pos = np.arange(S)
+    for b in range(pb.tokens.shape[0]):
+        seg = pb.seg_ids[b]
+        # definition: same document, causal
+        mask_seg = ((seg[:, None] == seg[None, :])
+                    & (seg[:, None] >= 0)
+                    & (pos[:, None] >= pos[None, :]))
+        # executed: causal AND kv position inside the query's window
+        mask_win = ((pos[:, None] >= pos[None, :])
+                    & (pos[None, :] >= pb.doc_start[b][:, None])
+                    & (seg[None, :] >= 0).repeat(S, 0))
+        np.testing.assert_array_equal(mask_win, mask_seg)
+
+
+def test_shard_batch_roundtrips_packed_layout():
+    docs = dpipe.sample_corpus(10, vocab_size=97, seed=1, mean_len=24,
+                               max_len=128)
+    pb = dpipe.pack_documents(docs, 128, rows=8)
+    batch = dpipe.shard_batch(pb.tokens, pb.labels, pods=2, data_size=4,
+                              pp=2, doc_start=pb.doc_start)
+    assert set(batch) == {"tokens", "labels", "doc_start"}
+    dp, b_loc = 2, 8 // (2 * 2)
+    for key, src in (("tokens", pb.tokens), ("labels", pb.labels),
+                     ("doc_start", pb.doc_start)):
+        assert batch[key].shape == (2, 4, b_loc, 128)
+        for p in range(2):
+            for i in range(4):
+                lo = (p * dp + i // 2) * b_loc
+                np.testing.assert_array_equal(batch[key][p, i],
+                                              src[lo:lo + b_loc])
+
+
+def test_pack_lengths_rejects_oversized_docs():
+    with pytest.raises(AssertionError):
+        part.pack_lengths([4, 300], 256)
+
+
+# ---------------------------------------------------------------------------
+# 3. kernel parity: ref vs pallas on the q_start segment window
+# ---------------------------------------------------------------------------
+
+
+def _varlen_attn_case(seed=0):
+    """[B=2, Tq=S=32] self-attention chunk with two docs in row 0 and one
+    doc + dead padding tail in row 1."""
+    from repro.kernels.ref import PAD_POS
+
+    key = jax.random.PRNGKey(seed)
+    B, T, H, Hkv, hd = 2, 32, 4, 2, 16
+    kq, kk, kv = jax.random.split(key, 3)
+    q = jax.random.normal(kq, (B, T, H, hd), jnp.float32)
+    k = jax.random.normal(kk, (B, T, Hkv, hd), jnp.float32)
+    v = jax.random.normal(kv, (B, T, Hkv, hd), jnp.float32)
+    q_pos = jnp.arange(T, dtype=jnp.int32)
+    kv_pos = jnp.arange(T, dtype=jnp.int32)
+    q_start = np.zeros((B, T), np.int32)
+    q_start[0, 20:] = 20          # row 0: docs [0,20) and [20,32)
+    q_start[1, 24:] = int(PAD_POS)  # row 1: doc [0,24), dead padding tail
+    return q, k, v, q_pos, kv_pos, jnp.asarray(q_start)
+
+
+def test_qstart_ref_matches_dense_oracle():
+    from repro.kernels.ref import (attention_partial_ref, mha_reference,
+                                   normalize)
+
+    q, k, v, q_pos, kv_pos, q_start = _varlen_attn_case()
+    o, m, l = attention_partial_ref(q, k, v, q_pos, kv_pos, q_start=q_start)
+    got = normalize(o, l)
+    want = mha_reference(q, k, v, q_pos, kv_pos, q_start=q_start)
+    np.testing.assert_allclose(got, want, atol=1e-5, rtol=0)
+    # dead rows (fully masked) produce exactly zero output
+    assert (np.asarray(got)[1, 24:] == 0.0).all()
+
+
+def test_qstart_pallas_matches_ref_fwd_and_grads():
+    from repro.kernels.flash_attention import flash_attention_partial
+    from repro.kernels.ref import attention_partial_ref, normalize
+
+    q, k, v, q_pos, kv_pos, q_start = _varlen_attn_case()
+    w = jax.random.normal(jax.random.PRNGKey(9), q.shape[:3] + (16,),
+                          jnp.float32)
+
+    def run(fn):
+        def loss(q, k, v):
+            o, m, l = fn(q, k, v)
+            return jnp.sum(normalize(o, l) * w), (o, m, l)
+
+        (val, oml), grads = jax.value_and_grad(
+            loss, argnums=(0, 1, 2), has_aux=True)(q, k, v)
+        return val, oml, grads
+
+    v_ref, (o_r, m_r, l_r), g_ref = run(
+        lambda q, k, v: attention_partial_ref(q, k, v, q_pos, kv_pos,
+                                              q_start=q_start))
+    v_pl, (o_p, m_p, l_p), g_pl = run(
+        lambda q, k, v: flash_attention_partial(q, k, v, q_pos, kv_pos,
+                                                q_start=q_start,
+                                                interpret=True))
+    np.testing.assert_allclose(float(v_pl), float(v_ref), atol=1e-5, rtol=0)
+    np.testing.assert_allclose(o_p, o_r, atol=1e-5, rtol=0)
+    np.testing.assert_allclose(l_p, l_r, atol=1e-5, rtol=0)
+    for gp, gr in zip(g_pl, g_ref):
+        np.testing.assert_allclose(gp, gr, atol=1e-5, rtol=0)
+        assert np.isfinite(np.asarray(gp)).all()
+    # dead-row queries get exactly zero gradient on both backends
+    assert (np.asarray(g_pl[0])[1, 24:] == 0.0).all()
+    assert (np.asarray(g_ref[0])[1, 24:] == 0.0).all()
+
+
+def test_qstart_none_is_identity():
+    """Threading q_start=None (every non-packed call site) is numerically
+    identical to the pre-varlen kernels — zero-window == no window."""
+    from repro.kernels.flash_attention import flash_attention_partial
+    from repro.kernels.ref import attention_partial_ref
+
+    q, k, v, q_pos, kv_pos, _ = _varlen_attn_case()
+    zeros = jnp.zeros((q.shape[0], q.shape[1]), jnp.int32)
+    for fn in (attention_partial_ref,
+               lambda *a, **kw: flash_attention_partial(*a, interpret=True,
+                                                        **kw)):
+        o0, m0, l0 = fn(q, k, v, q_pos, kv_pos, q_start=None)
+        o1, m1, l1 = fn(q, k, v, q_pos, kv_pos, q_start=zeros)
+        np.testing.assert_array_equal(np.asarray(o0), np.asarray(o1))
+        np.testing.assert_array_equal(np.asarray(l0), np.asarray(l1))
+
+
+# ---------------------------------------------------------------------------
+# 4. oracle equality + the varlen budget cell
+# ---------------------------------------------------------------------------
+
+
+def _corpus(cfg, n_docs=10, seed=3):
+    docs = dpipe.sample_corpus(n_docs, vocab_size=cfg.vocab_size, seed=seed,
+                               dist="zipf", mean_len=48, max_len=200)
+    return docs, [len(d) for d in docs]
+
+
+def _pp1_loss_grads(mdef, pb, doc_lens, backend="jnp"):
+    from repro.kernels import ops as kops
+
+    B = pb.tokens.shape[0]
+    shape = ShapeConfig("t", pb.tokens.shape[1], B, "train")
+    cell = resolve_cell(mdef, shape, data_size=1, model_size=1,
+                        overrides=dict(n_chunks=4, grad_accum=1,
+                                       partition="flops"),
+                        doc_lens=doc_lens)
+    cell = dataclasses.replace(cell, dtype=jnp.float32)
+    key = jax.random.PRNGKey(0)
+    sp1 = mdef.init_stage_params(key, 0, 1, jnp.float32)
+    g1 = mdef.init_globals(key, jnp.float32)
+    tok, lab = jnp.asarray(pb.tokens), jnp.asarray(pb.labels)
+    ds = jnp.asarray(pb.doc_start)
+
+    def f(sp_, g_):
+        out = run_pipeline(cell, SINGLE, sp_, g_, tok, lab, None,
+                           with_loss=True, doc_start=ds)
+        return out["loss"] / jnp.maximum(out["denom"], 1.0)
+
+    with kops.backend(backend):
+        return jax.jit(jax.value_and_grad(f, argnums=(0, 1)))(sp1, g1)
+
+
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+def test_packed_equals_pad_to_max_oracle_pp1(backend):
+    """Tentpole law at pp=1: packed loss and grads match the per-sequence
+    pad-to-max oracle (docs at their packed offsets — positions, RoPE
+    angles and causal windows bit-identical) to fp32 <= 1e-5."""
+    cfg = get_config("qwen2-7b").reduced()
+    mdef = build_model(cfg)
+    docs, lens = _corpus(cfg)
+    packed = dpipe.pack_documents(docs, 256)
+    oracle = dpipe.pad_to_max(docs, 256, at_packed_offsets=packed)
+    l_p, g_p = _pp1_loss_grads(mdef, packed, lens, backend)
+    l_o, g_o = _pp1_loss_grads(mdef, oracle, lens, backend)
+    np.testing.assert_allclose(float(l_p), float(l_o), atol=1e-5, rtol=0)
+    for a, b in zip(jax.tree_util.tree_leaves(g_p),
+                    jax.tree_util.tree_leaves(g_o)):
+        np.testing.assert_allclose(a, b, atol=1e-5, rtol=0)
+
+
+def _pp2_loss(mdef, cell, pb):
+    from repro.runtime import memledger as ml
+
+    fn, args = ml.build_step(cell, data_size=4, model_size=2,
+                             tokens=jnp.asarray(pb.tokens),
+                             labels=jnp.asarray(pb.labels),
+                             doc_start=jnp.asarray(pb.doc_start),
+                             with_grad=True)
+    loss, _ = jax.jit(fn)(*args)
+    return float(loss)
+
+
+def _pp2_cell(mdef, S, B, doc_lens):
+    shape = ShapeConfig("t", S, B, "train")
+    cell = resolve_cell(mdef, shape, data_size=4, model_size=2,
+                        overrides=dict(pp=2, dp=2, n_chunks=4, grad_accum=1,
+                                       partition="length"),
+                        doc_lens=doc_lens)
+    return dataclasses.replace(cell, dtype=jnp.float32)
+
+
+def test_packed_equals_pad_to_max_oracle_pp2(eight_devices):
+    """Tentpole law at pp=2: same equality through the lock-step tick loop,
+    the drain masks, and the explicit-offload prefetch seam."""
+    cfg = get_config("qwen2-7b").reduced()
+    mdef = build_model(cfg)
+    docs, lens = _corpus(cfg)
+    packed = dpipe.pack_documents(docs, 256, rows=4)
+    oracle = dpipe.pad_to_max(docs, 256, at_packed_offsets=packed, rows=12)
+    l_p = _pp2_loss(mdef, _pp2_cell(mdef, 256, 4, lens), packed)
+    l_o = _pp2_loss(mdef, _pp2_cell(mdef, 256, 12, lens), oracle)
+    np.testing.assert_allclose(l_p, l_o, atol=1e-5, rtol=0)
+
+
+def test_varlen_cell_profile_drives_schedule():
+    """A packed cell's chunk boundaries and alphas come from the measured
+    profile: heavily skewed packing shifts the chunk costs away from the
+    uniform triangle, and resolve_cell records the histogram on the cell."""
+    cfg = get_config("qwen2-7b").reduced()
+    mdef = build_model(cfg)
+    docs, lens = _corpus(cfg)
+    shape = ShapeConfig("t", 256, 4, "train")
+    cell = resolve_cell(mdef, shape, data_size=1, model_size=1,
+                        overrides=dict(n_chunks=2, grad_accum=1,
+                                       partition="flops"), doc_lens=lens)
+    assert cell.varlen and cell.doc_lens == tuple(lens)
+    assert sum(cell.sched.lengths) == 256
+    uni = resolve_cell(mdef, shape, data_size=1, model_size=1,
+                       overrides=dict(n_chunks=2, grad_accum=1,
+                                      partition="flops"))
+    assert not uni.varlen and uni.doc_lens == ()
+
+
+def test_varlen_budget_cell_bracket(eight_devices):
+    """The simulator's predicted peak brackets the measured ledger peak on
+    the varlen budget cell (the honesty gate's new cell, max_ratio 1.1)."""
+    from repro.runtime import memledger as ml
+
+    cfg = get_config("sppo-gpt-7b").reduced()
+    mdef = build_model(cfg)
+    doc_lens = [int(x) for x in dpipe.sample_doc_lengths(
+        n_docs=16, seed=0, dist="zipf", mean_len=48, max_len=192)]
+    shape = ShapeConfig("varlen", 256, 4, "train")
+    cell = resolve_cell(mdef, shape, data_size=4, model_size=2,
+                        overrides=dict(pp=2, dp=2, n_chunks=4, grad_accum=1,
+                                       partition="length", offload=True),
+                        doc_lens=doc_lens)
+    led = ml.measure(cell, data_size=4, model_size=2, baseline=False)
+    predicted = ml.predicted_spmd_peak(cell)
+    assert led.peak_bytes <= 1.1 * predicted, (
+        f"measured {led.peak_bytes} B vs predicted {predicted:.0f} B")
+    assert led.runtime_coverage_ok()
+
+
+def test_solver_varlen_candidate_prices_packed_profile():
+    """simulate_candidate(doc_lens=...) runs the packed profile (different
+    boundaries/alphas than the uniform triangle) and the uniform path is
+    untouched by the refactor (golden traces pin it byte-exactly)."""
+    from repro.core import solver
+
+    cfg = get_config("sppo-gpt-7b").reduced()
+    doc_lens = [int(x) for x in dpipe.sample_doc_lengths(
+        n_docs=16, seed=0, dist="zipf", mean_len=48, max_len=192)]
+    t_u, a_u, res_u = solver.simulate_candidate(
+        cfg, 256, 4, 10_000_000, 2, 4, 2)
+    t_v, a_v, res_v = solver.simulate_candidate(
+        cfg, 256, 4, 10_000_000, 2, 4, 2, doc_lens=doc_lens)
+    assert t_u > 0 and t_v > 0
+    assert len(a_v) == 4 and all(0.0 <= a <= 1.0 for a in a_v)
+    # the skewed histogram moves the attention fraction and the chunk
+    # boundaries off the uniform triangle, so the playout timeline differs
+    assert ([e.end for e in res_v.trace] != [e.end for e in res_u.trace]
+            or tuple(a_v) != tuple(a_u))
