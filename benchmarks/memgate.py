@@ -30,6 +30,14 @@ re-measured with ``prefetch="sync"`` and the gate fails unless
 reduces the priced exposed-H2D (``MemLedger.price_h2d`` over the measured
 bytes and backward windows).
 
+Gates with ``"offload_dtype"`` (fp8/int8) run the compression ablation
+instead (DESIGN.md §14): the same cell — same alphas, so the row split is
+held fixed — is re-measured with ``offload_dtype="none"`` and the gate
+fails unless the codec strictly cuts the measured host/wire off-bytes AND
+the priced sync-mode exposed-H2D, while leaving the raw device drain
+identical, and the one-step loss/grad drift of the compressed step against
+the raw step stays within the gate's pinned tolerances.
+
 The per-tick ledger CSVs (including the moments and h2d_stall_s columns,
 plus the sync-mode ablation ledgers) land in --out and are uploaded as a
 CI artifact.
@@ -83,7 +91,9 @@ def run_gate(gate: dict):
                        partition="length", offload=True,
                        msp=gate.get("msp", False),
                        offload_moments=opt_gate,
-                       opt_dtype=gate.get("opt_dtype", "float32")),
+                       opt_dtype=gate.get("opt_dtype", "float32"),
+                       offload_dtype=gate.get("offload_dtype", "none"),
+                       moments_dtype=gate.get("moments_dtype", "none")),
         doc_lens=doc_lens)
     cell = dataclasses.replace(cell, dtype=DTYPES[gate.get("dtype",
                                                            "bfloat16")])
@@ -178,6 +188,85 @@ def moment_reduction_check(gate: dict, cell, led) -> list:
     return failures
 
 
+def quant_reduction_check(gate: dict, cell, led, out_dir: str) -> list:
+    """The compressed channel must *pay off* honestly (DESIGN.md §14): the
+    same cell with ``offload_dtype="none"`` — the plan replace preserves
+    ``cell.alphas``, so both runs deploy the *identical* row split and the
+    comparison isolates the codec's byte effect — has to show strictly
+    larger measured host/wire off-bytes and strictly larger priced
+    sync-mode exposed-H2D (sync prices every reload in full, making the
+    comparison independent of the wall-clock backward windows), while the
+    raw device bytes the §5.2 recurrence drains stay identical.  On top of
+    the byte contract, the compressed step must still train: one real step
+    of each cell from the same init/batch, with the loss drift and the
+    relative grad-L2 drift within the gate's pinned tolerances."""
+    import dataclasses
+
+    import jax
+    import numpy as np
+
+    failures = []
+    name, codec = gate["name"], cell.plan.offload_dtype
+    cell_raw = dataclasses.replace(
+        cell, plan=dataclasses.replace(cell.plan, offload_dtype="none"))
+    led_raw = ml.measure(cell_raw, data_size=gate["data_size"],
+                         model_size=gate["model_size"], baseline=False)
+    led_raw.to_csv(os.path.join(out_dir, f"memledger-{name}-rawoff.csv"))
+    comp_wire = led.off_wire_bytes_total
+    raw_wire = led_raw.off_wire_bytes_total
+    if not comp_wire < raw_wire:
+        failures.append(
+            f"{name}: codec {codec} did not cut the measured host off-bytes"
+            f" ({comp_wire} B compressed vs {raw_wire} B raw)")
+    if led.off_bytes_total != led_raw.off_bytes_total:
+        failures.append(
+            f"{name}: raw device drain diverged under compression "
+            f"({led.off_bytes_total} B vs {led_raw.off_bytes_total} B) — "
+            "the recurrence subject must be codec-independent")
+    if comp_wire and not led.scale_bytes_total > 0:
+        failures.append(
+            f"{name}: compressed rows deployed but no act_scale bytes were "
+            "traced — the per-row scales are not riding the keep set")
+    from repro.core import costmodel as _cm
+
+    bw = _cm.V5E.d2h_bw
+    comp_exp = led.price_h2d(bw=bw, prefetch="sync")
+    raw_exp = led_raw.price_h2d(bw=bw, prefetch="sync")
+    if raw_exp > 0.0 and not comp_exp < raw_exp:
+        failures.append(
+            f"{name}: codec {codec} did not cut the priced sync exposed-H2D"
+            f" ({comp_exp:.3e}s vs {raw_exp:.3e}s raw)")
+    # one-step numerics drift against the raw-residency step
+    mk = dict(data_size=gate["data_size"], model_size=gate["model_size"])
+    fn_c, args_c = ml.build_step(cell, with_grad=True, **mk)
+    fn_r, args_r = ml.build_step(cell_raw, with_grad=True, **mk)
+    loss_c, grads_c = jax.jit(fn_c)(*args_c)
+    loss_r, grads_r = jax.jit(fn_r)(*args_r)
+    loss_drift = abs(float(loss_c) - float(loss_r)) / max(
+        abs(float(loss_r)), 1e-9)
+    flat_c = np.concatenate([np.asarray(l, np.float64).ravel()
+                             for l in jax.tree_util.tree_leaves(grads_c)])
+    flat_r = np.concatenate([np.asarray(l, np.float64).ravel()
+                             for l in jax.tree_util.tree_leaves(grads_r)])
+    gnorm = float(np.linalg.norm(flat_r))
+    grad_drift = float(np.linalg.norm(flat_c - flat_r)) / max(gnorm, 1e-12)
+    loss_tol = gate.get("loss_drift_tol", 0.02)
+    grad_tol = gate.get("grad_drift_tol", 0.15)
+    if loss_drift > loss_tol:
+        failures.append(
+            f"{name}: codec {codec} loss drift {loss_drift:.3e} exceeds "
+            f"the pinned tolerance {loss_tol:.0e}")
+    if grad_drift > grad_tol:
+        failures.append(
+            f"{name}: codec {codec} grad drift {grad_drift:.3e} exceeds "
+            f"the pinned tolerance {grad_tol:.0e}")
+    print(f"{name:32s} quant: wire {comp_wire} B vs {raw_wire} B raw, "
+          f"scales {led.scale_bytes_total} B, sync h2d {comp_exp:.3e}s vs "
+          f"{raw_exp:.3e}s, drift loss {loss_drift:.2e} grad "
+          f"{grad_drift:.2e}")
+    return failures
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--budgets", default="benchmarks/budgets.json")
@@ -206,6 +295,10 @@ def main(argv=None):
                             "update phase (the step did not fully execute)")
         if gate.get("offload_moments"):
             failures.extend(moment_reduction_check(gate, cell, led))
+        elif gate.get("offload_dtype", "none") != "none":
+            # compression ablation on the compressed-residency cells (§14)
+            failures.extend(quant_reduction_check(gate, cell, led,
+                                                  args.out))
         else:
             # prefetch ablation on the plain activation cells (§12)
             failures.extend(prefetch_ablation_check(gate, cell, led,

@@ -198,6 +198,12 @@ class ParallelPlan:
     # "xla" (legacy) keeps host-committed shardings and lets XLA stream.
     offload_moments: bool = False
     moments_mode: str = "explicit"
+    # compressed host residency (DESIGN.md §14): quantize the executed
+    # offload channels across the host link — act_off rows (offload_dtype)
+    # and the AdamW m/v moments (moments_dtype) — as fp8_e4m3 or int8 wire
+    # payloads with per-row fp32 scales; "none" keeps raw bf16/fp32 bytes
+    offload_dtype: str = "none"
+    moments_dtype: str = "none"
     grad_accum: int = 1
     # decode-only: microbatch pipeline over batch dim when pp > 1
     decode_microbatch: int = 1
@@ -224,6 +230,15 @@ class ParallelPlan:
             f"prefetch({self.prefetch!r}) must be ahead|sync")
         assert self.moments_mode in ("explicit", "xla"), (
             f"moments_mode({self.moments_mode!r}) must be explicit|xla")
+        assert self.offload_dtype in ("none", "fp8", "int8"), (
+            f"offload_dtype({self.offload_dtype!r}) must be none|fp8|int8")
+        assert self.moments_dtype in ("none", "fp8", "int8"), (
+            f"moments_dtype({self.moments_dtype!r}) must be none|fp8|int8")
+        assert self.moments_dtype == "none" or (
+            self.offload_moments and self.moments_mode == "explicit"), (
+            "moments_dtype compression requires offload_moments with "
+            "moments_mode='explicit' (there is no host channel to compress "
+            "otherwise)")
 
 
 # ---------------------------------------------------------------------------

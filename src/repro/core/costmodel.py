@@ -154,6 +154,66 @@ def tagged_bytes_per_token(cfg) -> float:
     return (attn + mlp) * ACT_ITEMSIZE
 
 
+def tagged_scale_elems_per_token(cfg) -> float:
+    """Per-layer *scale elements* per token of the compressed channel
+    (DESIGN.md §14): quantization is per-row over each tagged tensor's
+    trailing axis, so every tag site contributes one fp32 scale per
+    trailing-axis row per token —
+
+      q [B,T,H,hd] -> H, k/v [B,T,Hkv,hd] -> Hkv each,
+      attention out [B,T,H*hd] -> 1, MLP hidden [B,T,d_ff] -> 1
+
+    (MLA tags q_eff/k_eff/o_v reshaped to per-head rows analogously; the
+    ssm/hybrid mixer tensors are [B,T,expand*d] -> 1 per site)."""
+    H, Hkv = cfg.n_heads, cfg.n_kv_heads
+    if cfg.mla is not None:
+        attn = H + 1 + H                              # q_eff, k_eff, o_v
+    else:
+        attn = H + 2 * Hkv + 1                        # q, k, v, out
+    mlp = 1.0
+    if cfg.family in ("ssm", "hybrid"):
+        attn, mlp = 1.0, 1.0
+    return float(attn + mlp)
+
+
+SCALE_ITEMSIZE = 4  # per-row scales are fp32
+
+
+def codec_itemsize(offload_dtype: str = "none") -> int:
+    """Wire bytes per element of the act_off payload under a codec
+    (ACT_ITEMSIZE when uncompressed) — the costmodel view of
+    hostmem.codec_itemsize, kept import-cycle-free."""
+    if offload_dtype in (None, "none"):
+        return ACT_ITEMSIZE
+    assert offload_dtype in ("fp8", "int8"), offload_dtype
+    return 1
+
+
+def offload_wire_ratio(offload_dtype: str = "none") -> float:
+    """D2H/H2D lane volume multiplier of the compressed act_off channel:
+    payload bytes over raw bytes.  The per-row scales do *not* cross the
+    wire — they stay device-resident with the keep set (DESIGN.md §14) —
+    so the ratio is exactly the itemsize ratio."""
+    return codec_itemsize(offload_dtype) / ACT_ITEMSIZE
+
+
+def chunk_scale_bytes(cfg, lengths, *, batch: int, pp: int, sp: int,
+                      grad_accum: int = 1,
+                      offload_dtype: str = "none") -> list:
+    """Per-chunk, per-device bytes of the device-resident codec scales —
+    zero uncompressed.  Scales shadow the tagged set's row structure, so
+    the sharding/stage factors mirror ``chunk_act_bytes``; only the rows
+    that actually offload carry scales, which the caller accounts by
+    multiplying with the (quantized) per-chunk α, exactly as it scales the
+    off rows themselves."""
+    if offload_dtype in (None, "none"):
+        return [0.0 for _ in lengths]
+    per_tok = (tagged_scale_elems_per_token(cfg) * SCALE_ITEMSIZE
+               * (cfg.n_layers / pp) / sp)
+    b = batch / max(grad_accum, 1)
+    return [per_tok * b * ln for ln in lengths]
+
+
 def full_act_bytes_per_token(cfg) -> float:
     """The lumped ~34·d bytes/token/layer estimate of the *entire* per-layer
     activation set (the classic transformer accounting) — used for
@@ -197,6 +257,37 @@ def moment_bytes_per_param(opt_dtype="float32") -> float:
 def opt_state_bytes(n_params: int, opt_dtype="float32") -> float:
     """Total AdamW moment bytes for `n_params` parameters."""
     return n_params * moment_bytes_per_param(opt_dtype)
+
+
+def moment_bytes_from_shapes(shapes, opt_dtype="float32",
+                             moments_dtype: str = "none") -> float:
+    """Exact host-resident moment bytes for concrete leaf shapes.  Raw
+    residency reduces to the closed form above; compressed residency
+    (DESIGN.md §14) is 1 payload byte per element plus one fp32 scale per
+    trailing-axis row, for each of m and v — the scales ride the host
+    channel here (unlike the activation channel's device-resident scales),
+    so they count as host bytes and wire volume both."""
+    if moments_dtype in (None, "none"):
+        n = sum(int(np.prod(s)) for s in shapes)
+        return opt_state_bytes(n, opt_dtype)
+    assert moments_dtype in ("fp8", "int8"), moments_dtype
+    n = sum(int(np.prod(s)) for s in shapes)
+    rows = sum(int(np.prod(s[:-1])) for s in shapes)
+    return 2.0 * (n * 1 + rows * SCALE_ITEMSIZE)
+
+
+def moment_wire_bytes_per_param(opt_dtype="float32",
+                                moments_dtype: str = "none",
+                                *, row_len: int = 1024) -> float:
+    """Per-param transfer bytes of one update's moment round trip — the
+    solver's lane-pricing view (it has a parameter *count*, not shapes):
+    compressed residency moves 1 payload byte + amortized scale bytes per
+    element, with `row_len` the typical trailing-axis length (d_model for
+    transformer weight matrices)."""
+    if moments_dtype in (None, "none"):
+        return moment_bytes_per_param(opt_dtype)
+    assert moments_dtype in ("fp8", "int8"), moments_dtype
+    return 2.0 * (1.0 + SCALE_ITEMSIZE / max(1, row_len))
 
 
 def chunk_time_est(flops: float, bytes_moved: float, hw: Hardware,

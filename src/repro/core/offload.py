@@ -33,6 +33,19 @@ from repro.runtime import hostmem
 
 OFF_NAME = "act_off"
 KEEP_NAME = "act_keep"
+SCALE_NAME = "act_scale"
+
+
+def scale_name_for(off_name: str) -> str:
+    """The checkpoint name of a codec's per-row scales, carrying the same
+    chunk/tick qualifier as the off rows they reconstruct: ``act_off@t3``
+    -> ``act_scale@t3``.  Scales stay device-resident (they ride the keep
+    set — 4 bytes per row vs the rows themselves; hosting them would add a
+    second tiny transfer per site for no memory win) but must be *named*
+    and saved: an unnamed scale would be rematerialized by the backward
+    replay from the full-precision rows, i.e. the whole act_off tensor
+    would come back on device and the offload would be fictitious."""
+    return SCALE_NAME + off_name[len(OFF_NAME):]
 
 
 # ---------------------------------------------------------------------------
@@ -218,7 +231,7 @@ host_memory_kind = hostmem.host_memory_kind
 
 
 def host_round_trip(t, *, host_kind: Optional[str] = "auto",
-                    name: str = OFF_NAME):
+                    name: str = OFF_NAME, codec: str = "none"):
     """Route `t` through host memory with the saved residual on the host:
 
       D2H -> checkpoint_name(act_off) -> H2D
@@ -228,24 +241,61 @@ def host_round_trip(t, *, host_kind: Optional[str] = "auto",
     the H2D.  On backends without memory kinds the staged-copy emulation
     keeps the identical graph structure (a named save point fenced by
     optimization barriers, so XLA must materialize the staged buffer) —
-    on either path the round trip is a value-level identity."""
+    on either path the round trip is a value-level identity.
+
+    With a codec the rows cross compressed: quantize before the D2H (the
+    host residual is the 1-byte payload), dequantize after the H2D, and the
+    per-row fp32 scales stay on device under their own checkpoint name
+    (``scale_name_for``).  The round trip is then forward-*lossy* — the
+    consumer sees dequant(quant(t)) — so the gradient seam matters: a
+    naive round trip would differentiate through quantize (round/convert
+    have zero tangents ⇒ dead gradients); ``residual_substitute`` makes it
+    a straight-through estimator instead, primal = the reconstruction,
+    cotangent routed untouched to `t`'s producers."""
     kind = hostmem.resolve_host_kind(host_kind)
+    if codec in (None, "none"):
+        if kind is None:
+            staged = checkpoint_name(jax.lax.optimization_barrier(t), name)
+            return jax.lax.optimization_barrier(staged)
+        th = hostmem.to_host(t, kind)                             # D2H
+        th = checkpoint_name(th, name)                            # host residual
+        return hostmem.to_device(th, kind)                        # H2D
+    payload, scale = hostmem.quantize(t, codec)
+    scale = checkpoint_name(scale, scale_name_for(name))          # device-resident
+    # The named host residual crosses as an int8 BYTE CONTAINER: a named
+    # fp8 residual under save_only_these_names carries an inexact tangent
+    # through the remat partial-eval and poisons the primal with NaNs
+    # (jax 0.4.x); integer payloads get float0 tangents and are immune.
+    # Bitcast is bit-exact both ways and does not change the byte count —
+    # the mirror image of the prefetch seam's to_transport (there the
+    # custom_vjp channel needs an INEXACT container for the same payload).
+    wire = payload.dtype
+    pc = (payload if wire == jnp.int8
+          else jax.lax.bitcast_convert_type(payload, jnp.int8))
     if kind is None:
-        staged = checkpoint_name(jax.lax.optimization_barrier(t), name)
-        return jax.lax.optimization_barrier(staged)
-    th = hostmem.to_host(t, kind)                                 # D2H
-    th = checkpoint_name(th, name)                                # host residual
-    return hostmem.to_device(th, kind)                            # H2D
+        staged = checkpoint_name(jax.lax.optimization_barrier(pc), name)
+        pc_d = jax.lax.optimization_barrier(staged)
+    else:
+        ph = checkpoint_name(hostmem.to_host(pc, kind), name)
+        pc_d = hostmem.to_device(ph, kind)
+    payload_d = (pc_d if wire == jnp.int8
+                 else jax.lax.bitcast_convert_type(pc_d, wire))
+    deq = hostmem.dequantize(payload_d, scale, codec, t.dtype)
+    return residual_substitute(t, deq)
 
 
 def make_exec_tag(alpha: float, *, axis: int = 1,
-                  names: tuple = (OFF_NAME, KEEP_NAME), host_kind="auto"):
+                  names: tuple = (OFF_NAME, KEEP_NAME), host_kind="auto",
+                  codec: str = "none"):
     """Executed form of ``make_tag``: same row split, but the act_off rows
     round-trip through host memory so the transfers are real program
     dataflow rather than an XLA remat hint.  The tag is a value-level
     identity (slice + concat + copies); it can still shift XLA fusion
     decisions, so offload on/off losses and grads are asserted to match to
-    fp32 tolerance (<= 1e-5, tests/test_offload_exec.py), not bitwise."""
+    fp32 tolerance (<= 1e-5, tests/test_offload_exec.py), not bitwise.
+    With a codec the off rows additionally quantize across the link
+    (codec resolution replaces the fp32 tolerance; see
+    tests/test_offload_quant.py for the pinned drift bounds)."""
     alpha = float(alpha)
     off_name, keep_name = names
 
@@ -253,15 +303,18 @@ def make_exec_tag(alpha: float, *, axis: int = 1,
         if alpha <= 0.0:
             return checkpoint_name(t, keep_name)
         if alpha >= 1.0:
-            return host_round_trip(t, host_kind=host_kind, name=off_name)
+            return host_round_trip(t, host_kind=host_kind, name=off_name,
+                                   codec=codec)
         k = split_rows(t.shape[axis], alpha)
         if k <= 0:
             return checkpoint_name(t, keep_name)
         if k >= t.shape[axis]:
-            return host_round_trip(t, host_kind=host_kind, name=off_name)
+            return host_round_trip(t, host_kind=host_kind, name=off_name,
+                                   codec=codec)
         lo = jax.lax.slice_in_dim(t, 0, k, axis=axis)
         hi = jax.lax.slice_in_dim(t, k, t.shape[axis], axis=axis)
-        lo = host_round_trip(lo, host_kind=host_kind, name=off_name)
+        lo = host_round_trip(lo, host_kind=host_kind, name=off_name,
+                             codec=codec)
         hi = checkpoint_name(hi, keep_name)
         return jax.lax.concatenate([lo, hi], dimension=axis)
 
@@ -308,13 +361,26 @@ def _subst_bwd(_, ct):
 residual_substitute.defvjp(_subst_fwd, _subst_bwd)
 
 
-def make_capture_tag(alpha: float, collector: list, *, axis: int = 1):
+def make_capture_tag(alpha: float, collector: list, *, axis: int = 1,
+                     codec: str = "none"):
     """Prefetch-'ahead' forward tag: a dataflow identity that appends the
     (kind, tensor) row split of every tagged tensor to `collector` in
     traversal order — "off" rows destined for host, "keep" rows staying on
     device.  The seam (runner.prefetch_chunk) stacks them over slots and
-    performs the single D2H per site."""
+    performs the single D2H per site.  With a codec the off rows are
+    captured *compressed*: the collector gets the ("off", payload) wire
+    bytes plus a ("scale", scale) entry; the tag still returns `t`
+    unchanged, so the capture forward itself stays exact — only the
+    backward replay sees the reconstruction."""
     alpha = float(alpha)
+
+    def capture_off(t):
+        if codec in (None, "none"):
+            collector.append(("off", t))
+            return
+        payload, scale = hostmem.quantize(t, codec)
+        collector.append(("off", payload))
+        collector.append(("scale", scale))
 
     def tag(t):
         rows = t.shape[axis]
@@ -323,9 +389,9 @@ def make_capture_tag(alpha: float, collector: list, *, axis: int = 1):
             collector.append(("keep", t))
             return t
         if k >= rows:
-            collector.append(("off", t))
+            capture_off(t)
             return t
-        collector.append(("off", jax.lax.slice_in_dim(t, 0, k, axis=axis)))
+        capture_off(jax.lax.slice_in_dim(t, 0, k, axis=axis))
         collector.append(("keep", jax.lax.slice_in_dim(t, k, rows, axis=axis)))
         return t
 
@@ -333,17 +399,29 @@ def make_capture_tag(alpha: float, collector: list, *, axis: int = 1):
 
 
 def make_inject_tag(alpha: float, off_acts, keep_acts, *, axis: int = 1,
-                    names: tuple = (OFF_NAME, KEEP_NAME)):
+                    names: tuple = (OFF_NAME, KEEP_NAME),
+                    codec: str = "none", scales=()):
     """Prefetch-'ahead' backward-replay tag: re-walks the same tag sites as
     ``make_capture_tag`` (same α ⇒ same split decisions ⇒ same traversal
     order) and substitutes the staged residuals — `off_acts` reloaded one
     event ahead by the seam, `keep_acts` passed through on device — via
     ``residual_substitute``.  Substituted values carry the checkpoint names
-    so the per-slot ``save_only_these_names`` replay saves exactly them."""
+    so the per-slot ``save_only_these_names`` replay saves exactly them.
+    With a codec, `off_acts` are the reloaded wire payloads and `scales`
+    (device-resident, from the seam's residuals) reconstruct the rows at
+    the site before substitution — the same straight-through seam as the
+    exec path."""
     alpha = float(alpha)
     off_it = iter(off_acts)
     keep_it = iter(keep_acts)
+    scale_it = iter(scales)
     off_name, keep_name = names
+
+    def staged_off(t_part):
+        staged = next(off_it)
+        if codec in (None, "none"):
+            return staged
+        return hostmem.dequantize(staged, next(scale_it), codec, t_part.dtype)
 
     def tag(t):
         rows = t.shape[axis]
@@ -353,10 +431,10 @@ def make_inject_tag(alpha: float, off_acts, keep_acts, *, axis: int = 1,
                 residual_substitute(t, next(keep_it)), keep_name)
         if k >= rows:
             return checkpoint_name(
-                residual_substitute(t, next(off_it)), off_name)
+                residual_substitute(t, staged_off(t)), off_name)
         lo = jax.lax.slice_in_dim(t, 0, k, axis=axis)
         hi = jax.lax.slice_in_dim(t, k, rows, axis=axis)
-        lo = checkpoint_name(residual_substitute(lo, next(off_it)), off_name)
+        lo = checkpoint_name(residual_substitute(lo, staged_off(lo)), off_name)
         hi = checkpoint_name(residual_substitute(hi, next(keep_it)), keep_name)
         return jax.lax.concatenate([lo, hi], dimension=axis)
 
@@ -365,18 +443,26 @@ def make_inject_tag(alpha: float, off_acts, keep_acts, *, axis: int = 1,
 
 def checkpoint_block(fn, *, offload: bool, remat: str = "sppo",
                      mode: str = "explicit",
-                     names: tuple = (OFF_NAME, KEEP_NAME)):
+                     names: tuple = (OFF_NAME, KEEP_NAME),
+                     codec: str = "none"):
     """Wrap a layer/slot body with the SPPO two-level policy.
 
     mode='explicit' (the executed path): residual placement is explicit
     dataflow from the exec tags, so the policy only pins the two named
     classes as saved.  mode='xla': the original remat-offload policy —
-    placement delegated to XLA (save_and_offload_only_these_names)."""
+    placement delegated to XLA (save_and_offload_only_these_names).
+    With a codec the per-row scales join the save set under their own
+    name — leaving them out would let the backward replay recompute them
+    from the uncompressed rows, silently rematerializing the entire
+    act_off tensor on device (see ``scale_name_for``)."""
     if remat == "full":
         return jax.checkpoint(fn)   # save nothing: full recompute baseline
     if remat == "none":
         return fn
     if mode == "xla":
         return jax.checkpoint(fn, policy=sppo_policy(offload, names=names))
+    save = list(names)
+    if codec not in (None, "none"):
+        save.append(scale_name_for(names[0]))
     return jax.checkpoint(
-        fn, policy=jax.checkpoint_policies.save_only_these_names(*names))
+        fn, policy=jax.checkpoint_policies.save_only_these_names(*save))

@@ -99,7 +99,8 @@ def simulate(events: Sequence[Tuple[int, int, int]],
              p2p_bytes: Optional[Sequence[float]] = None,
              ici_bw: Optional[float] = None,
              bwd_ratio: float = 2.0,
-             prefetch: str = "ahead") -> SimResult:
+             prefetch: str = "ahead",
+             off_wire_ratio: float = 1.0) -> SimResult:
     """Play `events` through a pp-stage pipeline.
 
     events: (chunk, sub, n_sub) feed order for stage 0 (see
@@ -118,6 +119,11 @@ def simulate(events: Sequence[Tuple[int, int, int]],
         e issued at the backward *start* of event e+1, hidden under its
         compute; "sync": autodiff placement, reload of event e issued only
         when e's own backward is ready, fully exposed on the critical path.
+    off_wire_ratio: compressed-residency lane multiplier (DESIGN.md §14,
+        ``costmodel.offload_wire_ratio``) — scales only the D2H/H2D
+        transfer *volumes*; the memory recurrence stays in raw device
+        units because what materializes and drains on device is the
+        uncompressed tagged set (dequantization reconstructs full rows).
 
     Forward runs events in feed order, backward in reverse (the runner
     differentiates an unrolled forward loop, so each stage finishes all
@@ -138,8 +144,10 @@ def simulate(events: Sequence[Tuple[int, int, int]],
     f_frac = 1.0 / (1.0 + bwd_ratio)
     fcost = [chunk_costs[c] * f_frac / ns for c, _, ns in events]
     bcost = [chunk_costs[c] * (1.0 - f_frac) / ns for c, _, ns in events]
-    off_t = [_xfer(alphas[c] * acts[c] / ns, d2h_bw) for c, _, ns in events]
-    rld_t = [_xfer(alphas[c] * acts[c] / ns, h2d_bw) for c, _, ns in events]
+    off_t = [_xfer(off_wire_ratio * alphas[c] * acts[c] / ns, d2h_bw)
+             for c, _, ns in events]
+    rld_t = [_xfer(off_wire_ratio * alphas[c] * acts[c] / ns, h2d_bw)
+             for c, _, ns in events]
     p2p_t = [_xfer((p2p_bytes[c] if p2p_bytes else 0.0) / ns, ici_bw)
              for c, _, ns in events]
 
@@ -318,7 +326,9 @@ def opt_update_transfer(n_params_local: int, moment_bytes_per_param: float,
 
 def spmd_tick_peak(events: Sequence[Tuple[int, int, int]], *, pp: int,
                    chunk_acts: Sequence[float],
-                   alphas: Sequence[float]) -> Tuple[float, list]:
+                   alphas: Sequence[float],
+                   chunk_scales: Optional[Sequence[float]] = None
+                   ) -> Tuple[float, list]:
     """Predicted §5.2 memory recurrence of the *lock-step SPMD* tick loop
     (parallel/runner.py, pp > 1): every stage materializes one tagged set
     per tick — including the pp−1 drain ticks, which replay the last feed
@@ -326,11 +336,19 @@ def spmd_tick_peak(events: Sequence[Tuple[int, int, int]], *, pp: int,
     which rematerialize their full chunk (DESIGN.md §2).  This is the
     apples-to-apples prediction for the memledger's measured per-tick
     ledger; the per-stage event playout above (`simulate`) remains the
-    idealized pipeline target.  Returns (peak, per-tick resident)."""
+    idealized pipeline target.  Returns (peak, per-tick resident).
+
+    chunk_scales: per-chunk device-resident codec scale bytes of the rows
+    that offload (DESIGN.md §14) — they materialize with the chunk like
+    its activations but never drain with the off rows (they stay on device
+    until the backward consumes them); caller pre-multiplies by the
+    deployed (quantized) α, mirroring how the off-bytes drain is scaled."""
     events = list(events)
     ne = len(events)
     if ne == 0:
         return 0.0, []
+    scales = (list(chunk_scales) if chunk_scales is not None
+              else [0.0] * len(chunk_acts))
     n_ticks = ne + max(pp, 1) - 1
     resident = []
     m = 0.0
@@ -339,7 +357,7 @@ def spmd_tick_peak(events: Sequence[Tuple[int, int, int]], *, pp: int,
     for t in range(n_ticks):
         c = events[min(t, ne - 1)][0]
         a = chunk_acts[c]
-        m += a
+        m += a + scales[c]
         peak = max(peak, m)
         resident.append(m)
         m -= prev_off

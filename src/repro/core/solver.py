@@ -63,6 +63,8 @@ def simulate_candidate(cfg, seq_len: int, batch: int, n_params: int,
                        offload_moments: bool = False,
                        opt_dtype: str = "float32",
                        prefetch: str = "ahead",
+                       offload_dtype: str = "none",
+                       moments_dtype: str = "none",
                        doc_lens=None
                        ) -> Tuple[float, tuple, sim.SimResult]:
     """Build the candidate's cost/activation profile and play it out.
@@ -74,6 +76,12 @@ def simulate_candidate(cfg, seq_len: int, batch: int, n_params: int,
     simulator's H2D lane mode (DESIGN.md §12): "ahead" prices the
     one-chunk-ahead reload seam, "sync" the autodiff placement — both
     plan settings therefore have priced predictions.
+
+    offload_dtype / moments_dtype (DESIGN.md §14) price the compressed
+    channels: the act_off D2H/H2D lane volumes scale by the codec's wire
+    ratio (the α solver itself keeps planning in raw device bytes — the
+    recurrence drains full rows), and the moments epilogue moves the
+    payload + host-side scale bytes instead of the full opt_dtype leaves.
 
     doc_lens (optional) switches the candidate to a packed variable-length
     workload cell (DESIGN.md §13): the documents are greedily packed into
@@ -122,9 +130,13 @@ def simulate_candidate(cfg, seq_len: int, batch: int, n_params: int,
     # offload: tagged Type-1 activation bytes per chunk (cost model's
     # per-site ledger — costmodel.tagged_bytes_per_token)
     act = cm.chunk_act_bytes(cfg, sched.lengths, batch=batch, pp=pp, sp=sp)
-    # the D2H window is the *forward* compute of the next chunk (§5.2)
+    # the D2H window is the *forward* compute of the next chunk (§5.2);
+    # compression widens it in byte terms — only wire_ratio·A bytes must
+    # cross per offloaded row-set, so the solver sees the link at its
+    # effective (raw-bytes-per-second) rate and α can grow accordingly
+    wire_ratio = cm.offload_wire_ratio(offload_dtype)
     fwd_times = [t / (1.0 + bwd_ratio) for t in times]
-    plan = ofl.sequence_aware_alphas(act, fwd_times, hw.d2h_bw)
+    plan = ofl.sequence_aware_alphas(act, fwd_times, hw.d2h_bw / wire_ratio)
     alphas = plan.alphas if offload else tuple(0.0 for _ in act)
     # per-device inter-stage hand-off payload: hidden states of the chunk
     p2p = ([2 * batch * ln * cfg.d_model / sp for ln in sched.lengths]
@@ -133,11 +145,14 @@ def simulate_candidate(cfg, seq_len: int, batch: int, n_params: int,
         times, pp=pp, msp=msp, split=msp_split,
         chunk_acts=act, alphas=alphas,
         d2h_bw=hw.d2h_bw, p2p_bytes=p2p, ici_bw=hw.ici_bw,
-        bwd_ratio=bwd_ratio, prefetch=prefetch)
+        bwd_ratio=bwd_ratio, prefetch=prefetch,
+        off_wire_ratio=wire_ratio)
     total = res.total
     if offload_moments:
         total += sim.opt_update_transfer(
-            n_params / chips, cm.moment_bytes_per_param(opt_dtype),
+            n_params / chips,
+            cm.moment_wire_bytes_per_param(opt_dtype, moments_dtype,
+                                           row_len=cfg.d_model),
             hw.d2h_bw)
     return total, alphas, res
 

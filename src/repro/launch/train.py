@@ -72,6 +72,16 @@ def main(argv=None):
                     help="explicit: one H2D/D2H device_put per moment leaf "
                          "in the update; xla: host-committed shardings, "
                          "streaming delegated to XLA")
+    ap.add_argument("--offload-dtype", default=None,
+                    choices=["none", "fp8", "int8"],
+                    help="compress the act_off host rows (DESIGN.md §14): "
+                         "quantize on D2H to fp8_e4m3/int8 with per-row "
+                         "fp32 scales, dequantize inside the backward")
+    ap.add_argument("--moments-dtype", default=None,
+                    choices=["none", "fp8", "int8"],
+                    help="compressed host residency for the AdamW moments "
+                         "(needs --offload-moments and explicit mode): "
+                         "host leaves become (payload, per-row scale)")
     ap.add_argument("--prefetch", default=None, choices=["ahead", "sync"],
                     help="backward-reload placement on the explicit offload "
                          "path (DESIGN.md §12): ahead = one-chunk-ahead H2D "
@@ -117,6 +127,14 @@ def main(argv=None):
         overrides["moments_mode"] = args.moments_mode
     if args.prefetch:
         overrides["prefetch"] = args.prefetch
+    if args.offload_dtype:
+        overrides["offload_dtype"] = args.offload_dtype
+    if args.moments_dtype:
+        overrides["moments_dtype"] = args.moments_dtype
+        if args.moments_dtype != "none":
+            # compressed moments imply the explicit host-residency path
+            overrides.setdefault("offload_moments", True)
+            overrides.setdefault("moments_mode", "explicit")
     if args.msp:
         overrides["msp"] = True
         overrides["msp_split"] = args.msp_split
@@ -137,11 +155,13 @@ def main(argv=None):
     # moments are born in host memory when the plan offloads them — no
     # device-side opt_dtype copy of the params ever materializes at init
     opt_state = adamw.init_state(
-        params, opt_dtype, offload_moments=cell.plan.offload_moments)
+        params, opt_dtype, offload_moments=cell.plan.offload_moments,
+        moments_dtype=cell.plan.moments_dtype)
     if cell.plan.offload_moments:
         from repro.runtime import hostmem
-        log.info("optimizer moments host-resident (kind=%s, mode=%s)",
-                 hostmem.host_memory_kind(), cell.plan.moments_mode)
+        log.info("optimizer moments host-resident (kind=%s, mode=%s, "
+                 "dtype=%s)", hostmem.host_memory_kind(),
+                 cell.plan.moments_mode, cell.plan.moments_dtype)
     step_fn = jax.jit(
         make_train_step(cell, mesh,
                         lr_kwargs=dict(peak=args.lr, warmup=20,

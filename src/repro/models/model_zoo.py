@@ -549,27 +549,33 @@ class ModelDef:
         return {"shared": T.gather_params(g["shared"], shared_spec, ctx)}
 
     def stage_apply(self, stage_params, state, x, ctx, meta, g, *,
-                    offload=True, remat="sppo", offload_mode="explicit"):
+                    offload=True, remat="sppo", offload_mode="explicit",
+                    offload_dtype="none"):
         return T.stage_apply(self.cfg, self.cfg.family, stage_params,
                              self.stage_spec(), state, x, ctx, meta,
                              self._extras(g, ctx), offload=offload,
-                             remat=remat, offload_mode=offload_mode)
+                             remat=remat, offload_mode=offload_mode,
+                             offload_dtype=offload_dtype)
 
     def stage_apply_capture(self, stage_params, state, x, ctx, meta, g, *,
-                            alpha: float):
+                            alpha: float, offload_dtype="none"):
         """Prefetch-'ahead' forward (DESIGN.md §12): returns the stage
-        output plus the captured (off, keep) residual sets."""
+        output plus the captured (off, keep, scale) residual sets."""
         return T.stage_apply_capture(self.cfg, self.cfg.family, stage_params,
                                      self.stage_spec(), state, x, ctx, meta,
-                                     alpha, self._extras(g, ctx))
+                                     alpha, self._extras(g, ctx),
+                                     offload_dtype=offload_dtype)
 
     def stage_apply_inject(self, stage_params, state, x, ctx, meta, g, *,
-                           alpha: float, off_acts, keep_acts):
+                           alpha: float, off_acts, keep_acts,
+                           offload_dtype="none", scales=()):
         """Prefetch-'ahead' backward replay over staged residuals."""
         return T.stage_apply_inject(self.cfg, self.cfg.family, stage_params,
                                     self.stage_spec(), state, x, ctx, meta,
                                     alpha, off_acts, keep_acts,
-                                    self._extras(g, ctx))
+                                    self._extras(g, ctx),
+                                    offload_dtype=offload_dtype,
+                                    scales=scales)
 
 
 def build_model(name_or_cfg) -> ModelDef:

@@ -269,7 +269,7 @@ def gather_params(p_slot, shard_dims, ctx: Ctx):
 
 def stage_apply(cfg, family: str, stage_params, shard_dims, state, x, ctx: Ctx,
                 meta: ChunkMeta, extras=None, *, offload=True, remat="sppo",
-                offload_mode="explicit"):
+                offload_mode="explicit", offload_dtype="none"):
     """Run one pipeline stage (a stack of slots) on one chunk.
 
     stage_params: pytree with leading slot dim (local shards);
@@ -286,7 +286,8 @@ def stage_apply(cfg, family: str, stage_params, shard_dims, state, x, ctx: Ctx,
             return slot(cfg, p_full, s_l, x_l, ctx, meta, extras)
 
         fn = checkpoint_block(inner, offload=offload, remat=remat,
-                              mode=offload_mode, names=meta.names)
+                              mode=offload_mode, names=meta.names,
+                              codec=offload_dtype)
         xx, s_new, aux = fn(p_slot, s_slot, xx)
         return xx, (s_new, aux)
 
@@ -295,16 +296,19 @@ def stage_apply(cfg, family: str, stage_params, shard_dims, state, x, ctx: Ctx,
 
 
 def stage_apply_capture(cfg, family: str, stage_params, shard_dims, state, x,
-                        ctx: Ctx, meta: ChunkMeta, alpha: float, extras=None):
+                        ctx: Ctx, meta: ChunkMeta, alpha: float, extras=None,
+                        *, offload_dtype="none"):
     """Prefetch-'ahead' forward of one stage (DESIGN.md §12): the slot scan
     runs *unwrapped* — the tick-level custom_vjp seam above discards every
     intermediate, so per-slot checkpointing is moot — with a capture tag
     collecting the (off, keep) row split of each tagged tensor as extra
     scan outputs, stacked over the slot dim.
 
-    Returns (x, state', aux_sum, off_acts, keep_acts) where off_acts /
-    keep_acts are tuples of [n_slots, ...] arrays in tag-traversal order —
-    the residual sets whose placement the seam owns."""
+    Returns (x, state', aux_sum, off_acts, keep_acts, scales) where
+    off_acts / keep_acts are tuples of [n_slots, ...] arrays in
+    tag-traversal order — the residual sets whose placement the seam owns.
+    With a codec the off entries are the quantized wire payloads and
+    `scales` the matching per-row fp32 scales (empty tuple uncompressed)."""
     slot = SLOT_FNS[family]
 
     def body(carry, ps):
@@ -312,45 +316,55 @@ def stage_apply_capture(cfg, family: str, stage_params, shard_dims, state, x,
         p_slot, s_slot = ps
         collector: list = []
         meta_c = meta._replace(
-            tag=offload_mod.make_capture_tag(alpha, collector))
+            tag=offload_mod.make_capture_tag(alpha, collector,
+                                             codec=offload_dtype))
         p_full = gather_params(p_slot, shard_dims, ctx)
         xx, s_new, aux = slot(cfg, p_full, s_slot, xx, ctx, meta_c, extras)
         off = tuple(t for k, t in collector if k == "off")
         keep = tuple(t for k, t in collector if k == "keep")
-        return xx, (s_new, aux, off, keep)
+        scales = tuple(t for k, t in collector if k == "scale")
+        return xx, (s_new, aux, off, keep, scales)
 
-    x, (state_new, auxs, off_acts, keep_acts) = jax.lax.scan(
+    x, (state_new, auxs, off_acts, keep_acts, scales) = jax.lax.scan(
         body, x, (stage_params, state))
-    return x, state_new, jnp.sum(auxs), off_acts, keep_acts
+    return x, state_new, jnp.sum(auxs), off_acts, keep_acts, scales
 
 
 def stage_apply_inject(cfg, family: str, stage_params, shard_dims, state, x,
                        ctx: Ctx, meta: ChunkMeta, alpha: float,
-                       off_acts, keep_acts, extras=None):
+                       off_acts, keep_acts, extras=None, *,
+                       offload_dtype="none", scales=()):
     """Prefetch-'ahead' backward replay of one stage: the same slot scan,
     consuming the staged residuals (off rows reloaded one event ahead by
     the seam, keep rows passed through on device) as per-slot scan inputs;
     the inject tag substitutes them at the original tag sites.  Each slot
     runs under ``save_only_these_names`` so the replay's own residual set
-    is exactly the substituted values — no second materialization."""
+    is exactly the substituted values — no second materialization.  With a
+    codec the off inputs are reloaded wire payloads and `scales` joins the
+    scan inputs so the inject tag can reconstruct rows at each site."""
     slot = SLOT_FNS[family]
+    save_names = list(meta.names)
+    if offload_dtype not in (None, "none"):
+        save_names.append(offload_mod.scale_name_for(meta.names[0]))
 
     def body(carry, ps):
         xx = carry
-        p_slot, s_slot, off_slot, keep_slot = ps
+        p_slot, s_slot, off_slot, keep_slot, scale_slot = ps
 
-        def inner(p_l, s_l, x_l, off_l, keep_l):
+        def inner(p_l, s_l, x_l, off_l, keep_l, scale_l):
             p_full = gather_params(p_l, shard_dims, ctx)
             meta_i = meta._replace(tag=offload_mod.make_inject_tag(
-                alpha, off_l, keep_l, names=meta.names))
+                alpha, off_l, keep_l, names=meta.names,
+                codec=offload_dtype, scales=scale_l))
             return slot(cfg, p_full, s_l, x_l, ctx, meta_i, extras)
 
         fn = jax.checkpoint(
             inner, policy=jax.checkpoint_policies.save_only_these_names(
-                *meta.names))
-        xx, s_new, aux = fn(p_slot, s_slot, xx, off_slot, keep_slot)
+                *save_names))
+        xx, s_new, aux = fn(p_slot, s_slot, xx, off_slot, keep_slot,
+                            scale_slot)
         return xx, (s_new, aux)
 
     x, (state_new, auxs) = jax.lax.scan(
-        body, x, (stage_params, state, off_acts, keep_acts))
+        body, x, (stage_params, state, off_acts, keep_acts, tuple(scales)))
     return x, state_new, jnp.sum(auxs)

@@ -43,6 +43,15 @@ def moment_names(i: int):
     return f"{OPT_M_NAME}@{i}", f"{OPT_V_NAME}@{i}"
 
 
+def moment_scale_names(i: int):
+    """Names of a compressed moment leaf's per-row scales.  Deliberately
+    *not* under the ``opt_m@``/``opt_v@`` prefixes — the ledger's moment
+    channel counts payload bytes and scale bytes separately (the scales are
+    host-resident here, unlike the activation channel's device-resident
+    ``act_scale``; see DESIGN.md §14)."""
+    return f"{OPT_M_NAME}_scale@{i}", f"{OPT_V_NAME}_scale@{i}"
+
+
 class AdamWState(NamedTuple):
     step: jax.Array   # int32 []
     m: object         # pytree like params
@@ -50,15 +59,38 @@ class AdamWState(NamedTuple):
 
 
 def init_state(params, opt_dtype=jnp.float32, *, offload_moments: bool = False,
-               host_kind="auto") -> AdamWState:
+               host_kind="auto", moments_dtype: str = "none") -> AdamWState:
     """Zero moments, placed where they will live.
 
     With ``offload_moments`` the zeros are *born in host memory*
     (hostmem.host_zeros: numpy buffer -> device_put into the host space), so
     initialization never materializes an opt_dtype copy of the parameters in
     device memory — the step-0 peak equals the steady-state peak
-    (regression-tested in tests/test_opt_offload.py)."""
-    if offload_moments:
+    (regression-tested in tests/test_opt_offload.py).
+
+    With ``moments_dtype`` ("fp8" | "int8", DESIGN.md §14) each moment leaf
+    is the compressed host residency pair ``(payload, scale)`` — the 1-byte
+    wire payload plus its per-row fp32 scales, both host-resident.  Zero
+    payload dequantizes to zero under any scale, so all-zero init is exact."""
+    if moments_dtype not in (None, "none"):
+        assert offload_moments, (
+            "moments_dtype compression requires offload_moments (there is "
+            "no host channel to compress otherwise)")
+        kind = hostmem.resolve_host_kind(host_kind)
+        wire = hostmem.codec_wire_dtype(moments_dtype)
+
+        def zeros(p):
+            sshape = p.shape[:-1] + (1,) if p.ndim >= 1 else ()
+            # the scale can't inherit p's sharding verbatim: its trailing
+            # dim is 1, so a last-axis-sharded param needs the partition
+            # dropped there (row_scale_sharding)
+            ssh = (hostmem.row_scale_sharding(p, kind)
+                   if kind is not None and not isinstance(p, jax.core.Tracer)
+                   else None)
+            return (hostmem.host_zeros(p.shape, wire, kind, like=p),
+                    hostmem.host_zeros(sshape, jnp.float32, kind, like=p,
+                                       sharding=ssh))
+    elif offload_moments:
         kind = hostmem.resolve_host_kind(host_kind)
         zeros = lambda p: hostmem.host_zeros(p.shape, opt_dtype, kind, like=p)
     else:
@@ -85,6 +117,7 @@ def apply_update(params, grads, state: AdamWState, *, lr, b1=0.9, b2=0.95,
                  eps=1e-8, weight_decay=0.1, clip_norm=1.0,
                  offload_moments: bool = False,
                  moments_mode: str = "explicit", host_kind="auto",
+                 moments_dtype: str = "none",
                  probe: Optional[callable] = None):
     """One AdamW step. Returns (new_params, new_state, metrics).
 
@@ -96,10 +129,23 @@ def apply_update(params, grads, state: AdamWState, *, lr, b1=0.9, b2=0.95,
     behavior: no explicit copies; placement/streaming delegated to XLA via
     the moments' committed host shardings.
 
+    moments_dtype ("fp8" | "int8", DESIGN.md §14): the host residency is
+    the compressed ``(payload, scale)`` pair — the H2D brings both on
+    device and dequantizes to fp32 for the update; the D2H writes back the
+    re-quantized pair.  Compression cuts the *host* bytes and the transfer
+    volume (payload + scales vs the full opt_dtype leaf); the device-side
+    update still runs in fp32 either way.  Lossy by design — drift bounds
+    are pinned in tests/test_offload_quant.py.
+
     probe: optional identity hook (runtime/memledger.update_probe) threaded
     onto the step counter — runtime evidence that the update phase executed.
     """
     assert moments_mode in ("explicit", "xla"), moments_mode
+    compressed = moments_dtype not in (None, "none")
+    assert not compressed or (offload_moments
+                              and moments_mode == "explicit"), (
+        "moments_dtype compression requires offload_moments with "
+        "moments_mode='explicit'")
     gnorm = global_norm(grads)
     scale = jnp.minimum(1.0, clip_norm / jnp.maximum(gnorm, 1e-12))
     step = state.step + 1
@@ -123,23 +169,41 @@ def apply_update(params, grads, state: AdamWState, *, lr, b1=0.9, b2=0.95,
     flat_g = treedef.flatten_up_to(grads)
     flat_m = treedef.flatten_up_to(state.m)
     flat_v = treedef.flatten_up_to(state.v)
+    def fetch(leaf, name, scale_name):
+        """Host residency -> device fp32 moment (compressed: H2D the
+        (payload, scale) pair and dequantize; raw: H2D the named leaf)."""
+        if compressed:
+            payload, sc = leaf
+            payload = hostmem.to_device(checkpoint_name(payload, name), kind)
+            sc = hostmem.to_device(checkpoint_name(sc, scale_name), kind)
+            return hostmem.dequantize(payload, sc, moments_dtype, jnp.float32)
+        # the *host-resident* buffer carries the name, mirroring the
+        # act_off contract: what the ledger counts is what lives off
+        # device between steps
+        leaf = checkpoint_name(leaf, name)
+        if moments_mode == "explicit":
+            leaf = hostmem.to_device(leaf, kind)   # one H2D per moment leaf
+        return leaf
+
+    def store(leaf_new):
+        """Device moment -> host residency (compressed: quantize and D2H
+        the pair; raw: D2H the leaf)."""
+        if compressed:
+            payload, sc = hostmem.quantize(leaf_new, moments_dtype)
+            return (hostmem.to_host(payload, kind), hostmem.to_host(sc, kind))
+        if offload_moments and moments_mode == "explicit":
+            return hostmem.to_host(leaf_new, kind)  # one D2H writes back
+        return leaf_new
+
     out = []
     for i, (p, g, m, v) in enumerate(zip(flat_p, flat_g, flat_m, flat_v)):
         if offload_moments:
             nm, nv = moment_names(i)
-            # the *host-resident* buffer carries the name, mirroring the
-            # act_off contract: what the ledger counts is what lives off
-            # device between steps
-            m = checkpoint_name(m, nm)
-            v = checkpoint_name(v, nv)
-            if moments_mode == "explicit":
-                m = hostmem.to_device(m, kind)     # one H2D per moment leaf
-                v = hostmem.to_device(v, kind)
+            nms, nvs = moment_scale_names(i)
+            m = fetch(m, nm, nms)
+            v = fetch(v, nv, nvs)
         p_new, m_new, v_new = upd(p, g, m, v)
-        if offload_moments and moments_mode == "explicit":
-            m_new = hostmem.to_host(m_new, kind)   # one D2H writes back
-            v_new = hostmem.to_host(v_new, kind)
-        out.append((p_new, m_new, v_new))
+        out.append((p_new, store(m_new), store(v_new)))
     if probe is not None:
         step = probe(step)
     new_p = treedef.unflatten([o[0] for o in out])

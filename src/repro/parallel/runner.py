@@ -127,6 +127,15 @@ def resolve_cell(arch, shape_cfg: ShapeConfig, *, data_size=16, model_size=16,
         assert not plan.offload, (
             "decode plans must not offload: a decode step has no backward, "
             "so offloaded activations are never reloaded (DESIGN.md §4)")
+        # compressed residency rides the offload channels; with offload
+        # pinned off on decode a codec could only quantize tensors that are
+        # never offloaded in the first place — reject it as a config error
+        # rather than silently ignoring the knob (DESIGN.md §14)
+        assert plan.offload_dtype == "none" and plan.moments_dtype == "none", (
+            "decode plans must not request compressed residency: with "
+            "offload disabled there is no host channel to compress "
+            f"(offload_dtype={plan.offload_dtype!r}, "
+            f"moments_dtype={plan.moments_dtype!r})")
         sched = part.ChunkSchedule((1,), (0,), 1, "decode")
         alphas = (0.0,)
     else:
@@ -194,7 +203,11 @@ def resolve_cell(arch, shape_cfg: ShapeConfig, *, data_size=16, model_size=16,
         acts = cm.chunk_act_bytes(cfg, sched.lengths, batch=b_loc,
                                   pp=plan.pp, sp=plan.sp,
                                   grad_accum=plan.grad_accum)
-        alphas = ofl.sequence_aware_alphas(acts, times, hw.d2h_bw).alphas
+        # compressed residency crosses the link at wire_ratio·A bytes per
+        # offloaded row-set, so the α solver sees the effective raw-bytes
+        # link rate and can offload more per hiding window (DESIGN.md §14)
+        bw_eff = hw.d2h_bw / cm.offload_wire_ratio(plan.offload_dtype)
+        alphas = ofl.sequence_aware_alphas(acts, times, bw_eff).alphas
         if not plan.offload:
             alphas = tuple(0.0 for _ in alphas)
     return Cell(mdef=mdef, plan=plan, shape=shape_cfg, pods=pods,
@@ -224,7 +237,8 @@ def chunk_tag(cell: Cell, chunk: int, *, suffix: str, train: bool):
     alpha = cell.alphas[chunk]
     plan = cell.plan
     if train and plan.offload and plan.offload_mode == "explicit":
-        return ofl.make_exec_tag(alpha, names=names), names
+        return ofl.make_exec_tag(alpha, names=names,
+                                 codec=plan.offload_dtype), names
     return ofl.make_tag(alpha, names=names), names
 
 
@@ -262,43 +276,60 @@ def prefetch_chunk(cell: Cell, ctx: Ctx, *, alpha: float, names: tuple,
 
     mdef = cell.mdef
     off_name, keep_name = names
+    codec = cell.plan.offload_dtype
     kind = hostmem.resolve_host_kind("auto")
     meta = ChunkMeta(q_pos=q_pos, cache_off=cache_off, kv_view=kv_view,
                      tag=None, names=names, q_start=q_start)
 
     def capture(stage_p, g, state, x):
-        y, s2, aux, off_acts, keep_acts = mdef.stage_apply_capture(
-            stage_p, state, x, ctx, meta, g, alpha=alpha)
+        y, s2, aux, off_acts, keep_acts, scales = mdef.stage_apply_capture(
+            stage_p, state, x, ctx, meta, g, alpha=alpha,
+            offload_dtype=codec)
+        # Compressed residency (DESIGN.md §14): the captured off rows are
+        # already the codec's wire payloads; int8 crosses the link bitcast
+        # into an fp8 byte container because the reloads ride custom_vjp
+        # *cotangents* (integer outputs have float0 tangents — nothing to
+        # carry the bytes).  Same byte count either way, so the ledger's
+        # act_off accounting is unchanged by the transport view.
         off_host = tuple(
-            checkpoint_name(hostmem.to_host(t, kind), off_name)
+            checkpoint_name(hostmem.to_host(hostmem.to_transport(t, codec),
+                                            kind), off_name)
             for t in off_acts)
         keep_dev = tuple(checkpoint_name(t, keep_name) for t in keep_acts)
-        return y, s2, aux, off_host, keep_dev
+        scale_dev = tuple(
+            checkpoint_name(s, ofl.scale_name_for(off_name)) for s in scales)
+        return y, s2, aux, off_host, keep_dev, scale_dev
 
     @jax.custom_vjp
     def run(stage_p, g, state, x, link_in):
-        y, s2, aux, off_host, _ = capture(stage_p, g, state, x)
+        y, s2, aux, off_host, _, _ = capture(stage_p, g, state, x)
         return y, s2, aux, off_host
 
     def run_fwd(stage_p, g, state, x, link_in):
-        y, s2, aux, off_host, keep_dev = capture(stage_p, g, state, x)
+        y, s2, aux, off_host, keep_dev, scale_dev = capture(stage_p, g,
+                                                            state, x)
         return ((y, s2, aux, off_host),
-                (stage_p, g, state, x, link_in, keep_dev))
+                (stage_p, g, state, x, link_in, keep_dev, scale_dev))
 
     def run_bwd(res, cts):
-        stage_p, g, state, x, link_in, keep_dev = res
+        stage_p, g, state, x, link_in, keep_dev, scale_dev = res
         ct_y, ct_s2, ct_aux, staged_off = cts
         # one-chunk-ahead H2D: reload the *previous* chunk's host residuals
         # now; the copy has no data dependency on this chunk's backward
         # compute below, so it overlaps it, and the result rides the link
-        # cotangent to the previous chunk's seam.
+        # cotangent to the previous chunk's seam.  Reloads stay in wire
+        # form across the link — dequantization belongs to the chunk that
+        # owns the scales (its own backward, below).
         staged_prev = jax.tree_util.tree_map(
             lambda t: hostmem.to_device(t, kind), link_in)
+        staged_off = tuple(hostmem.from_transport(t, codec)
+                           for t in staged_off)
 
         def replay(stage_p, g, state, x):
             return mdef.stage_apply_inject(
                 stage_p, state, x, ctx, meta, g, alpha=alpha,
-                off_acts=staged_off, keep_acts=keep_dev)
+                off_acts=staged_off, keep_acts=keep_dev,
+                offload_dtype=codec, scales=scale_dev)
 
         _, vjp = jax.vjp(replay, stage_p, g, state, x)
         gp, gg, gs, gx = vjp((ct_y, ct_s2, ct_aux))
@@ -436,7 +467,8 @@ def run_pipeline(cell: Cell, ctx: Ctx, stage_p, g, tokens, labels, context,
                 x, state, aux = mdef.stage_apply(
                     stage_p, state, x, ctx, meta, g,
                     offload=plan.offload, remat=plan.remat,
-                    offload_mode=plan.offload_mode)
+                    offload_mode=plan.offload_mode,
+                    offload_dtype=plan.offload_dtype if with_loss else "none")
             if ledger is not None:
                 from repro.runtime import memledger as _ml
                 x = _ml.tick_probe(x, ledger, c)
@@ -511,7 +543,8 @@ def run_pipeline(cell: Cell, ctx: Ctx, stage_p, g, tokens, labels, context,
             x_out, state, aux = mdef.stage_apply(
                 stage_p, state, h, ctx, meta, g,
                 offload=plan.offload, remat=plan.remat,
-                offload_mode=plan.offload_mode)
+                offload_mode=plan.offload_mode,
+                offload_dtype=plan.offload_dtype if with_loss else "none")
         if ledger is not None:
             from repro.runtime import memledger as _ml
             x_out = _ml.tick_probe(x_out, ledger, t)
@@ -671,7 +704,8 @@ def make_train_step(cell: Cell, mesh, *, lr_kwargs=None, ledger=None):
         new_p, new_o, met = adamw.apply_update(
             params, grads, opt_state, lr=lr,
             offload_moments=plan.offload_moments,
-            moments_mode=plan.moments_mode)
+            moments_mode=plan.moments_mode,
+            moments_dtype=plan.moments_dtype)
         met["loss"] = loss
         return new_p, new_o, met
 

@@ -41,6 +41,15 @@ Measurement channels, all taken from the *real* program:
    ``h2d_exposed_s``/``prefetch_ahead`` summary rows; the memgate's
    prefetch ablation gates the strict ahead-vs-sync reduction.
 
+5. **Compressed channel** (DESIGN.md §14) — when the plan sets
+   ``offload_dtype``, the traced ``act_off@…`` names carry the 1-byte
+   codec payload and ``act_scale@…`` names the device-resident per-row
+   fp32 scales.  The ledger keeps ``off_bytes`` in *raw* device units
+   (what the §5.2 recurrence drains — elems × the activation itemsize)
+   and reports the honest host/wire side separately as
+   ``off_wire_bytes`` plus ``scale_bytes``; ``price_h2d`` prices the
+   reload lane over the wire form.
+
 The ledger then replays the §5.2 recurrence M_t = M_{t-1} + A_t −
 α_{t-1}A_{t-1} over the measured per-tick bytes; CI's memory-gate compares
 that measured peak — plus the device-resident moments term — against the
@@ -102,29 +111,53 @@ tick_probe.defvjp(_probe_fwd, _probe_bwd)
 # ---------------------------------------------------------------------------
 
 
-def _aval_bytes(aval) -> int:
+# Bit widths of the sub-byte ml_dtypes: numpy's ``dtype.itemsize`` reports
+# a full byte for them (storage is byte-padded per *element* only in plain
+# numpy arrays — packed XLA buffers hold 2 int4s per byte), so itemsize*8
+# would double-count every int4/fp4 tensor.  Anything not listed really is
+# itemsize*8 bits.
+_DTYPE_BITS = {
+    "int2": 2, "uint2": 2,
+    "int4": 4, "uint4": 4,
+    "float4_e2m1fn": 4,
+}
+
+
+def _aval_elems(aval) -> int:
     try:
         size = 1
         for s in aval.shape:
             size *= int(s)
-        return size * aval.dtype.itemsize
+        return size
     except Exception:  # pragma: no cover - abstract tokens etc.
         return 0
 
 
-def _walk(jaxpr, mult: int, out: Dict[str, int]) -> None:
+def _aval_bytes(aval) -> int:
+    try:
+        bits = _DTYPE_BITS.get(aval.dtype.name, aval.dtype.itemsize * 8)
+        return (_aval_elems(aval) * bits + 7) // 8
+    except Exception:  # pragma: no cover - abstract tokens etc.
+        return 0
+
+
+def _walk(jaxpr, mult: int, out: Dict[str, int],
+          elems: Optional[Dict[str, int]] = None) -> None:
     for eqn in jaxpr.eqns:
         if eqn.primitive.name == "name":
             nm = eqn.params.get("name", "")
             out[nm] = out.get(nm, 0) + mult * sum(
                 _aval_bytes(v.aval) for v in eqn.invars)
+            if elems is not None:
+                elems[nm] = elems.get(nm, 0) + mult * sum(
+                    _aval_elems(v.aval) for v in eqn.invars)
             continue
         m = mult
         if eqn.primitive.name == "scan":
             m = mult * int(eqn.params.get("length", 1))
         for v in eqn.params.values():
             for sub in _sub_jaxprs(v):
-                _walk(sub, m, out)
+                _walk(sub, m, out, elems)
 
 
 def _sub_jaxprs(v):
@@ -139,18 +172,33 @@ def _sub_jaxprs(v):
 
 
 def tagged_bytes_from_jaxpr(closed_jaxpr) -> Dict[str, Dict[str, int]]:
-    """{suffix: {"off": bytes, "keep": bytes}} from a traced (forward)
-    jaxpr.  Walk the *forward-only* trace — under grad the remat'd backward
-    repeats the name equations and would double-count."""
+    """{suffix: {"off": bytes, "off_elems": n, "keep": bytes,
+    "scale": bytes}} from a traced (forward) jaxpr.  Walk the
+    *forward-only* trace — under grad the remat'd backward repeats the
+    name equations and would double-count.
+
+    "off" is the bytes of the named host rows *as traced* — under a
+    compressed plan (DESIGN.md §14) that is the wire/host payload;
+    "off_elems" is the element count behind the same names, so callers can
+    reconstruct the raw device bytes the §5.2 recurrence drains (elems ×
+    the activation itemsize) independent of the transport dtype.  "scale"
+    is the device-resident per-row codec scales (``act_scale@…``), zero on
+    uncompressed plans."""
     raw: Dict[str, int] = {}
-    _walk(closed_jaxpr.jaxpr, 1, raw)
+    elems: Dict[str, int] = {}
+    _walk(closed_jaxpr.jaxpr, 1, raw, elems)
     per: Dict[str, Dict[str, int]] = {}
+    bases = ((ofl.OFF_NAME, "off"), (ofl.KEEP_NAME, "keep"),
+             (ofl.SCALE_NAME, "scale"))
     for nm, nbytes in raw.items():
-        for base, kind in ((ofl.OFF_NAME, "off"), (ofl.KEEP_NAME, "keep")):
+        for base, kind in bases:
             if nm.startswith(base):
                 suffix = nm[len(base):]
-                per.setdefault(suffix, {"off": 0, "keep": 0})
+                per.setdefault(suffix, {"off": 0, "off_elems": 0,
+                                        "keep": 0, "scale": 0})
                 per[suffix][kind] += nbytes
+                if kind == "off":
+                    per[suffix]["off_elems"] += elems.get(nm, 0)
                 break
     return per
 
@@ -175,7 +223,14 @@ def moment_bytes_from_jaxpr(closed_jaxpr) -> Dict[str, object]:
               or nm.startswith(OPT_V_NAME + "@")}
     m_b = sum(b for nm, b in leaves.items() if nm.startswith(OPT_M_NAME))
     v_b = sum(b for nm, b in leaves.items() if nm.startswith(OPT_V_NAME))
-    return {"m": m_b, "v": v_b, "leaves": leaves}
+    # compressed residency (§14): the per-row fp32 scales are host leaves
+    # of their own, named opt_{m,v}_scale@<i> — deliberately NOT under the
+    # opt_m@/opt_v@ prefixes, so m/v stay payload-only sums
+    scales = {nm: b for nm, b in raw.items()
+              if nm.startswith(OPT_M_NAME + "_scale@")
+              or nm.startswith(OPT_V_NAME + "_scale@")}
+    return {"m": m_b, "v": v_b, "scale": sum(scales.values()),
+            "leaves": leaves, "scale_leaves": scales}
 
 
 def _walk_device_puts(jaxpr, out: Dict[str, int]) -> None:
@@ -201,7 +256,8 @@ def device_put_kinds(closed_jaxpr) -> Dict[str, int]:
 
 
 def init_moment_device_bytes(params, opt_dtype, *, offload_moments: bool,
-                             host_kind="auto") -> int:
+                             host_kind="auto",
+                             moments_dtype: str = "none") -> int:
     """Bytes of moment zeros that end up resident in *device* memory space
     after ``adamw.init_state``, from the traced init: creation equations
     (``broadcast_in_dim`` — jnp.zeros) allocate in the default device
@@ -215,7 +271,7 @@ def init_moment_device_bytes(params, opt_dtype, *, offload_moments: bool,
 
     cjx = jax.make_jaxpr(lambda ps: adamw.init_state(
         ps, opt_dtype, offload_moments=offload_moments,
-        host_kind=host_kind))(params)
+        host_kind=host_kind, moments_dtype=moments_dtype))(params)
     created: Dict[object, int] = {}
     dev = 0
     for eqn in cjx.jaxpr.eqns:
@@ -286,11 +342,19 @@ class TickRow:
     valid: bool           # False for the SPMD drain ticks (masked compute)
     alpha: float
     mat_bytes: int        # tagged bytes materialized this tick (off + keep)
-    off_bytes: int        # ... of which routed to host
+    off_bytes: int        # ... of which routed to host, in RAW device bytes
     resident: int = 0     # §5.2 recurrence replay, after materialization
     fwd_t: Optional[float] = None   # runtime probe wall-clock (first sample)
     bwd_t: Optional[float] = None
     h2d_stall_s: Optional[float] = None  # exposed reload time (price_h2d)
+    # compressed channel (DESIGN.md §14): the bytes that actually cross the
+    # wire / sit in host memory (codec payload; None = raw, == off_bytes)
+    # and the device-resident per-row scale bytes that ride the keep set.
+    # off_bytes deliberately stays in raw device units — the §5.2 recurrence
+    # drains full activation rows from device memory regardless of how few
+    # bytes their host copy takes.
+    off_wire_bytes: Optional[int] = None
+    scale_bytes: int = 0
 
 
 @dataclass
@@ -306,6 +370,7 @@ class MemLedger:
     opt_time_s: Optional[float] = None          # measured update wall time
     prefetch: str = "ahead"                     # plan's reload placement
     h2d_exposed_s: Optional[float] = None       # Σ per-tick h2d_stall_s
+    offload_codec: str = "none"                 # act-channel codec (§14)
 
     # -- runtime channel ----------------------------------------------------
     def record_runtime(self, phase: str, tick: int) -> None:
@@ -313,9 +378,18 @@ class MemLedger:
 
     # -- byte channel -------------------------------------------------------
     def load_tagged(self, per_suffix: Dict[str, Dict[str, int]],
-                    events, pp: int, alphas) -> None:
+                    events, pp: int, alphas,
+                    act_itemsize: Optional[int] = None) -> None:
         """Fold jaxpr-measured per-tick bytes + the feed schedule into tick
-        rows and replay the §5.2 recurrence."""
+        rows and replay the §5.2 recurrence.
+
+        ``act_itemsize`` converts the walked off-channel element counts
+        back to raw device bytes; under a compressed plan the traced off
+        names carry the 1-byte payload, so ``off_bytes`` (what the device
+        recurrence drains) and ``off_wire_bytes`` (what the host/link
+        carries) diverge.  Without it (or without element counts in
+        ``per_suffix``) the traced bytes are used for both — exact for
+        uncompressed plans."""
         self.alphas = tuple(float(a) for a in alphas)
         n_ticks = len(events) + pp - 1
         rows = []
@@ -323,14 +397,24 @@ class MemLedger:
             e = min(t, len(events) - 1)
             chunk = events[e][0]
             key = f"@t{t}" if pp > 1 else f"@c{chunk}"
-            got = per_suffix.get(key, {"off": 0, "keep": 0})
+            got = per_suffix.get(key, {})
+            wire = got.get("off", 0)
+            n_el = got.get("off_elems")
+            raw_off = (n_el * act_itemsize
+                       if act_itemsize is not None and n_el is not None
+                       else wire)
+            scale = got.get("scale", 0)
             rows.append(TickRow(
                 tick=t, chunk=chunk, valid=t < len(events),
                 alpha=self.alphas[chunk],
-                mat_bytes=got["off"] + got["keep"],
-                off_bytes=got["off"]))
+                mat_bytes=raw_off + got.get("keep", 0) + scale,
+                off_bytes=raw_off,
+                off_wire_bytes=wire,
+                scale_bytes=scale))
         # M_t = M_{t-1} + A_t − off_{t-1}: the previous tick's offload
-        # drains while tick t computes (§5.2, tick granularity)
+        # drains while tick t computes (§5.2, tick granularity).  Only the
+        # raw activation rows drain — the codec scales stay device-resident
+        # with the keep set until the backward consumes them.
         m = 0
         prev_off = 0
         for r in rows:
@@ -374,7 +458,11 @@ class MemLedger:
         rows = self.ticks
         total = 0.0
         for i, r in enumerate(rows):
-            rld = r.off_bytes / bw if bw else 0.0
+            # the reload lane carries the host copy: the codec payload
+            # under a compressed plan (off_wire_bytes), raw rows otherwise
+            vol = (r.off_wire_bytes if r.off_wire_bytes is not None
+                   else r.off_bytes)
+            rld = vol / bw if bw else 0.0
             if mode == "sync":
                 stall = rld
             else:
@@ -397,8 +485,25 @@ class MemLedger:
 
     @property
     def host_bytes(self) -> int:
-        """Total bytes placed in host memory across the forward."""
+        """Total bytes placed in host memory across the forward — the wire
+        form when the act channel is compressed (§14)."""
+        return sum((r.off_wire_bytes if r.off_wire_bytes is not None
+                    else r.off_bytes) for r in self.ticks)
+
+    @property
+    def off_bytes_total(self) -> int:
+        """Raw device bytes the offload channel drained (codec-independent)."""
         return sum(r.off_bytes for r in self.ticks)
+
+    @property
+    def off_wire_bytes_total(self) -> int:
+        return sum((r.off_wire_bytes if r.off_wire_bytes is not None
+                    else r.off_bytes) for r in self.ticks)
+
+    @property
+    def scale_bytes_total(self) -> int:
+        """Device-resident codec scale bytes across the forward (§14)."""
+        return sum(r.scale_bytes for r in self.ticks)
 
     @property
     def combined_peak_bytes(self) -> int:
@@ -431,11 +536,15 @@ class MemLedger:
         with open(path, "w", newline="") as f:
             w = csv.writer(f)
             w.writerow(["tick", "chunk", "valid", "alpha", "mat_bytes",
-                        "off_bytes", "resident_bytes", "moments_dev_bytes",
+                        "off_bytes", "off_wire_bytes", "scale_bytes",
+                        "resident_bytes", "moments_dev_bytes",
                         "h2d_stall_s", "fwd_t", "bwd_t"])
             for r in self.ticks:
                 w.writerow([r.tick, r.chunk, int(r.valid),
                             f"{r.alpha:.4f}", r.mat_bytes, r.off_bytes,
+                            ("" if r.off_wire_bytes is None
+                             else r.off_wire_bytes),
+                            r.scale_bytes,
                             r.resident,
                             "" if mom is None else mom.dev_resident_bytes,
                             ("" if r.h2d_stall_s is None
@@ -445,6 +554,10 @@ class MemLedger:
             w.writerow([])
             w.writerow(["peak_bytes", self.peak_bytes])
             w.writerow(["host_bytes", self.host_bytes])
+            w.writerow(["offload_codec", self.offload_codec])
+            w.writerow(["off_bytes_total", self.off_bytes_total])
+            w.writerow(["off_wire_bytes_total", self.off_wire_bytes_total])
+            w.writerow(["scale_bytes_total", self.scale_bytes_total])
             w.writerow(["prefetch_ahead", int(self.prefetch == "ahead")])
             if self.h2d_exposed_s is not None:
                 w.writerow(["h2d_exposed_s", f"{self.h2d_exposed_s:.9f}"])
@@ -493,7 +606,15 @@ def read_csv(path: str) -> Dict[str, object]:
                 rows.append(row)
             else:
                 key, val = line[0], line[1]
-                summary[key] = float(val) if "." in val else int(val)
+                # try-int / try-float / else-string: summary values are
+                # mostly numeric, but e.g. offload_codec is a plain string
+                try:
+                    summary[key] = int(val)
+                except ValueError:
+                    try:
+                        summary[key] = float(val)
+                    except ValueError:
+                        summary[key] = val
     return {"rows": rows, "summary": summary}
 
 
@@ -634,9 +755,21 @@ def predicted_spmd_peak(cell) -> float:
     scale = jnp.dtype(cell.dtype).itemsize / cm.ACT_ITEMSIZE
     alphas_q = [ofl.quantized_alpha(ln // cell.plan.sp, a)
                 for ln, a in zip(cell.sched.lengths, cell.alphas)]
+    chunk_scales = None
+    if cell.plan.offload_dtype not in (None, "none"):
+        # compressed plans keep the per-row fp32 scales device-resident
+        # with the keep set (§14): they enter the peak with the chunk and
+        # never drain; only the offloaded row fraction has scales
+        sb = cm.chunk_scale_bytes(cell.cfg, cell.sched.lengths,
+                                  batch=cell.b_loc, pp=cell.plan.pp,
+                                  sp=cell.plan.sp,
+                                  grad_accum=cell.plan.grad_accum,
+                                  offload_dtype=cell.plan.offload_dtype)
+        chunk_scales = [b * a for b, a in zip(sb, alphas_q)]
     peak, _ = sim.spmd_tick_peak(events, pp=cell.plan.pp,
                                  chunk_acts=[a * scale for a in acts],
-                                 alphas=alphas_q)
+                                 alphas=alphas_q,
+                                 chunk_scales=chunk_scales)
     return peak
 
 
@@ -654,8 +787,22 @@ def predicted_moment_bytes(cell, *, data_size: int) -> Tuple[float, float]:
     from repro.parallel import specs as SP
 
     st = SP.stage_struct(cell.mdef, cell.plan.pp, data_size, cell.dtype)
-    leaves = [int(np.prod(l.shape)) for l in jax.tree_util.tree_leaves(st)]
+    shapes = [tuple(l.shape) for l in jax.tree_util.tree_leaves(st)]
     dt = cell.plan.opt_dtype
+    mdt = getattr(cell.plan, "moments_dtype", "none")
+    if mdt not in (None, "none"):
+        # compressed residency (§14): per-leaf bytes = payload + per-row
+        # scales, for both moments; the staged pair mirrors the measured
+        # zip over the flattened (payload, scale) host leaves
+        per_leaf = [cm.moment_bytes_from_shapes([s], dt, mdt)
+                    for s in shapes]
+        pairs = []
+        for s in shapes:
+            n = int(np.prod(s)) if s else 1
+            rows = int(np.prod(s[:-1])) if len(s) >= 1 else 1
+            pairs.append(max(2 * n, 2 * rows * cm.SCALE_ITEMSIZE))
+        return sum(per_leaf), max(pairs)
+    leaves = [int(np.prod(s)) for s in shapes]
     return cm.opt_state_bytes(sum(leaves), dt), cm.opt_state_bytes(
         max(leaves), dt)
 
@@ -687,14 +834,17 @@ def _measure_opt(cell, ledger: MemLedger, params, grads) -> None:
     # the real train_step's optimizer does
     params = jax.tree_util.tree_map(
         lambda p, g: jax.device_put(p, g.sharding), params, grads)
+    moments_dtype = getattr(plan, "moments_dtype", "none")
     state = adamw.init_state(params, opt_dtype,
-                             offload_moments=plan.offload_moments)
+                             offload_moments=plan.offload_moments,
+                             moments_dtype=moments_dtype)
     probe = update_probe(ledger)
 
     def opt_fn(p, g, s):
         return adamw.apply_update(
             p, g, s, lr=1e-3, offload_moments=plan.offload_moments,
-            moments_mode=plan.moments_mode, probe=probe)
+            moments_mode=plan.moments_mode, probe=probe,
+            moments_dtype=moments_dtype)
 
     cjx = jax.make_jaxpr(opt_fn)(params, grads, state)
     named = moment_bytes_from_jaxpr(cjx)
@@ -704,7 +854,8 @@ def _measure_opt(cell, ledger: MemLedger, params, grads) -> None:
     pairs = [int(m.nbytes) + int(v.nbytes)
              for m, v in zip(leaves_m, leaves_v)]
     init_dev = init_moment_device_bytes(
-        params, opt_dtype, offload_moments=plan.offload_moments)
+        params, opt_dtype, offload_moments=plan.offload_moments,
+        moments_dtype=moments_dtype)
 
     exe = jax.jit(opt_fn)
     jax.block_until_ready(exe(params, grads, state))
@@ -723,7 +874,7 @@ def _measure_opt(cell, ledger: MemLedger, params, grads) -> None:
         v_bytes=sum(int(v.nbytes) for v in leaves_v),
         n_leaves=len(leaves_m),
         max_pair_bytes=max(pairs) if pairs else 0,
-        named_bytes=named["m"] + named["v"],
+        named_bytes=named["m"] + named["v"] + named.get("scale", 0),
         h2d_count=kinds.get(hostmem.DEVICE_KIND, 0),
         d2h_count=sum(c for k, c in kinds.items()
                       if k != hostmem.DEVICE_KIND),
@@ -772,7 +923,9 @@ def measure(cell, *, data_size: int, model_size: int, seed: int = 0,
     _drain_callbacks()                 # probes may land after the arrays
 
     events = runner.pipeline_feed_events(plan, cell.sched.n)
-    ledger.load_tagged(per_suffix, events, plan.pp, cell.alphas)
+    ledger.offload_codec = plan.offload_dtype
+    ledger.load_tagged(per_suffix, events, plan.pp, cell.alphas,
+                       act_itemsize=jnp.dtype(cell.dtype).itemsize)
 
     # 2c) priced exposed-H2D over the measured bytes/windows (§12)
     from repro.core import costmodel as _cm

@@ -238,3 +238,25 @@ def test_decode_plans_never_offload():
     with pytest.raises(AssertionError, match="decode plans must not offload"):
         resolve_cell(mdef, shape, data_size=4, model_size=2,
                      overrides=dict(offload=True))
+
+
+def test_decode_plans_reject_compressed_residency():
+    """Compressed residency rides the offload channels (DESIGN.md §14);
+    a decode plan has neither, so requesting a codec must be rejected just
+    like requesting offload itself."""
+    cfg = get_config("qwen2-7b").reduced()
+    mdef = build_model(cfg)
+    shape = ShapeConfig("d", 256, 8, "decode")
+    with pytest.raises(AssertionError, match="compressed residency"):
+        resolve_cell(mdef, shape, data_size=4, model_size=2,
+                     overrides=dict(offload_dtype="fp8"))
+    # an otherwise-valid compressed-moments plan is still a decode error
+    with pytest.raises(AssertionError, match="compressed residency"):
+        resolve_cell(mdef, shape, data_size=4, model_size=2,
+                     overrides=dict(moments_dtype="int8",
+                                    offload_moments=True,
+                                    moments_mode="explicit"))
+    # without its prerequisites the moments codec fails plan validation
+    with pytest.raises(AssertionError, match="moments_dtype"):
+        resolve_cell(mdef, shape, data_size=4, model_size=2,
+                     overrides=dict(moments_dtype="int8"))
