@@ -1,0 +1,190 @@
+"""Ring-attention smoke + the 4M-token admission gate (DESIGN.md §15).
+
+Two halves, one artifact:
+
+  * executed smoke — one real train step (loss + grads through the SPPO
+    chunk loop) on the emulated (1, 2) mesh, attn_mode="ring" vs the
+    "gather_kv" baseline.  Both are collectives over the same shards, so
+    the step times should be the same order; the row exists to catch a
+    ring schedule that traces into something pathological, not to race
+    two CPU emulations.
+  * priced artifact — THE acceptance gate: the simulated 4M-token
+    qwen2-7b cell (batch=1, pp=4, sp=16) must be *rejected* by the
+    per-stage memory model at attn_mode="local" (full visible KV per
+    device) and *admitted* at "ring" (one resident shard + two in-flight
+    blocks), and the solver's chooser must pick ring.  The per-hop CSV
+    rows come from ``simulate.ring_overlap`` on that cell's last (widest)
+    chunk: per hop the zig-zag compute fraction, KV bytes on the wire,
+    transfer/compute spans, and the exposed (unhidden) time.
+
+  PYTHONPATH=src python -m benchmarks.bench_ring [--fast] [--csv ring.csv]
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+from typing import List, Tuple
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import jax
+
+from repro.configs.base import ShapeConfig, get_config
+from repro.core import costmodel as cm
+from repro.core import simulate as sim
+from repro.core import solver
+from repro.models.model_zoo import build_model
+from repro.parallel.runner import resolve_cell
+
+ARCH = "qwen2-7b"
+SEQ_LEN = 256
+BATCH = 4
+# the acceptance cell: 4M tokens on a 16-way ring, 4 stages
+BIG_SEQ = 4 * 2 ** 20
+BIG_N_PARAMS = 7_600_000_000
+BIG_PP, BIG_N, BIG_SP = 4, 32, 16
+
+
+def _dist_step_time(mdef, attn_mode: str, reps: int = 3) -> float:
+    """Best-of-N wall time of one jitted dist loss+grad step on (1, 2).
+
+    Uses the memledger step scaffold — the same shard_map'd program the
+    honesty tests and the memory gate execute — so the timed step is the
+    real pipeline, grads included."""
+    from repro.runtime import memledger as ml
+
+    cell = resolve_cell(mdef,
+                        ShapeConfig(f"ring-bench-{attn_mode}", SEQ_LEN,
+                                    BATCH, "train"),
+                        data_size=1, model_size=2,
+                        overrides=dict(n_chunks=2, grad_accum=1,
+                                       partition="length",
+                                       attn_mode=attn_mode))
+    fn, args = ml.build_step(cell, data_size=1, model_size=2)
+    step = jax.jit(fn)
+    jax.block_until_ready(step(*args))  # compile
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(step(*args))
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def _big_cell_hops(cfg, hw=cm.V5E):
+    """Per-hop (frac, bytes, xfer_s, comp_s, start, end, exposed) rows for
+    the widest chunk of the acceptance cell, forward pass."""
+    fracs = cm.ring_hop_fractions(BIG_SP, causal=True, layout="zigzag")
+    kv_end = BIG_SEQ  # last chunk sees the full context
+    ln = BIG_SEQ // BIG_N
+    hop_bytes = cm.ring_hop_bytes(cfg, kv_end / BIG_SP, 1)
+    xfer = [0.0] + [hop_bytes / hw.ici_bw] * (BIG_SP - 1)
+    hop_flops = (4.0 * 1 * (ln / BIG_SP) * (kv_end / BIG_SP)
+                 * cfg.n_heads * cfg.head_dim)
+    comp = [f * hop_flops / hw.peak_flops_bf16 for f in fracs]
+    _, _, events = sim.ring_overlap(comp, xfer)
+    spans = {h: (s, e) for kind, h, s, e in events if kind == "compute"}
+    rows = []
+    prev_end = 0.0
+    for h in range(BIG_SP):
+        start, end = spans[h]
+        exposed = max(0.0, start - prev_end)
+        rows.append((h, fracs[h], hop_bytes if h else 0.0, xfer[h],
+                     comp[h], start, end, exposed))
+        prev_end = end
+    return rows
+
+
+def bench_ring(measure: bool = True,
+               csv_path: str | None = None) -> Tuple[List, str, bool]:
+    """Returns (csv_rows, text, gate_ok)."""
+    cfg_big = get_config(ARCH)
+    times = {}
+    if measure:
+        mdef = build_model(get_config(ARCH).reduced())
+        for mode in ("ring", "gather_kv"):
+            times[mode] = _dist_step_time(mdef, mode)
+
+    adm = solver.admit_attn_mode(cfg_big, BIG_SEQ, 1, BIG_N_PARAMS,
+                                 pp=BIG_PP, sp=BIG_SP)
+    chosen, report = solver.choose_attn_mode(cfg_big, BIG_SEQ, 1,
+                                             BIG_N_PARAMS, pp=BIG_PP,
+                                             n=BIG_N, sp=BIG_SP,
+                                             modes=("local", "ring"))
+    ok = (not adm["local"][0]) and adm["ring"][0] and chosen == "ring"
+    hops = _big_cell_hops(cfg_big)
+
+    csv_rows = []
+    lines = [f"== Ring-distributed attention ({ARCH}) =="]
+    if measure:
+        for mode in ("ring", "gather_kv"):
+            t = times[mode]
+            csv_rows.append((f"ring_step_{mode}", f"{t * 1e6:.0f}", ""))
+            lines.append(f"executed step ({mode:9s}, reduced, (1,2) mesh): "
+                         f"{t * 1e3:8.1f} ms")
+        lines.append(f"ring/gather_kv ratio: "
+                     f"{times['ring'] / times['gather_kv']:.2f}x "
+                     "(informational — same collectives family)")
+    gib = 2 ** 30
+    for mode, (fits, d) in adm.items():
+        lines.append(f"4M cell demand [{mode:9s}]: "
+                     f"{d['total'] / gib:7.2f} GiB vs "
+                     f"{cm.V5E.hbm_bytes / gib:.0f} GiB HBM -> "
+                     f"{'admit' if fits else 'REJECT'}")
+        csv_rows.append((f"ring_admit_{mode}", "",
+                         f"{d['total'] / gib:.2f}"))
+    lines.append(f"chooser picked: {chosen} "
+                 f"(est {report['ring']['est_time']:.1f} s/iter)")
+    lines.append(f"gate (local rejected, ring admitted, ring chosen): "
+                 f"{'OK' if ok else 'FAIL'}")
+
+    if csv_path:
+        import csv as _csv
+
+        with open(csv_path, "w", newline="") as f:
+            w = _csv.writer(f)
+            w.writerow(["section", "name", "value"])
+            for mode, t in times.items():
+                w.writerow(["step", mode, f"{t:.6f}"])
+            for mode, (fits, d) in adm.items():
+                w.writerow(["admit", mode, int(fits)])
+                w.writerow(["demand_bytes", mode, int(d["total"])])
+            w.writerow(["chosen", chosen, ""])
+            w.writerow([])
+            w.writerow(["hop", "frac", "wire_bytes", "xfer_s", "comp_s",
+                        "comp_start_s", "comp_end_s", "exposed_s"])
+            for h, frac, nbytes, xf, cp, s0, s1, exp in hops:
+                w.writerow([h, f"{frac:.4f}", int(nbytes), f"{xf:.6f}",
+                            f"{cp:.6f}", f"{s0:.6f}", f"{s1:.6f}",
+                            f"{exp:.6f}"])
+            w.writerow([])
+            w.writerow(["gate_ok", int(ok), ""])
+    return csv_rows, "\n".join(lines), ok
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="skip the executed step timing; gate on the "
+                         "priced admission artifact only")
+    ap.add_argument("--csv", default=None)
+    args = ap.parse_args(argv)
+    rows, text, ok = bench_ring(measure=not args.fast, csv_path=args.csv)
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us},{derived}")
+    print()
+    print(text)
+    if not ok:
+        print("\nRING GATE FAILED: the 4M-token cell admission artifact "
+              "does not hold (expected: local rejected, ring admitted, "
+              "ring chosen)", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

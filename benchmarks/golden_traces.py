@@ -19,6 +19,7 @@ import os
 import sys
 
 from repro.configs.base import get_config
+from repro.core import simulate as sim
 from repro.core import solver
 
 GOLDEN_DIR = os.path.join(os.path.dirname(__file__), "..", "tests", "golden")
@@ -66,6 +67,16 @@ CONFIGS = [
           n_params=None, pp=2, n=4, sp=2, msp=False,
           doc_lens=dict(n_docs=16, seed=0, dist="zipf", mean_len=48,
                         max_len=192))),
+    # ring-distributed attention lane (DESIGN.md §15): the sp-hop KV
+    # rotation priced per chunk — freezes the zig-zag hop fractions, the
+    # per-hop overlap recurrence, and the ring_stall the playout exposes
+    ("gpt7b_seq512k_pp4_n8_ring",
+     dict(arch="sppo-gpt-7b", seq_len=524288, batch=1,
+          n_params=6_700_000_000, pp=4, n=8, sp=16, msp=False,
+          attn_mode="ring")),
+    ("gpt7b_reduced_pp2_ring",
+     dict(arch="sppo-gpt-7b", reduced=True, seq_len=256, batch=4,
+          n_params=None, pp=2, n=4, sp=2, msp=False, attn_mode="ring")),
 ]
 
 
@@ -94,6 +105,12 @@ def trace_lines(spec: dict) -> list:
         f"d2h_stall_s,{res.d2h_stall:.9e}",
         f"h2d_stall_s,{res.h2d_stall:.9e}",
         f"p2p_stall_s,{res.p2p_stall:.9e}",
+    ]
+    if any(ev.lane == sim.RING for ev in res.trace):
+        # emitted only for ring-priced configs so the pre-ring golden
+        # files stay byte-identical
+        lines.append(f"ring_stall_s,{res.ring_stall:.9e}")
+    lines += [
         f"peak_units,{':'.join(f'{p:.6e}' for p in res.peak_units)}",
         "stage,lane,chunk,sub,n_sub,start_s,end_s",
     ]

@@ -211,6 +211,14 @@ class ParallelPlan:
     # attn_mode: "gather_q" (paper-faithful flash-decoding merge) |
     #            "gather_kv" (all-gather the KV shard, no merge collectives)
     #            | "auto" (byte-count switch per call site)
+    #            | "ring" (rotate KV blocks around the model axis via
+    #              ppermute, fold per-hop partials in canonical source order
+    #              — DESIGN.md §15; KV working set stays at two blocks, so
+    #              chunks whose visible KV exceeds one stage's HBM admit)
+    #            | "local" (no attention collectives at all — executed only
+    #              at sp == 1; in the cost model it prices full visible-KV
+    #              residency per device, the mode the §15 memory model
+    #              rejects for beyond-one-stage contexts)
     attn_mode: str = "gather_q"
     # cast the attention softmax-merge partials to bf16 before reduction
     merge_bf16: bool = False
@@ -239,6 +247,14 @@ class ParallelPlan:
             "moments_dtype compression requires offload_moments with "
             "moments_mode='explicit' (there is no host channel to compress "
             "otherwise)")
+        assert self.attn_mode in ("gather_q", "gather_kv", "auto", "ring",
+                                  "local"), (
+            f"attn_mode({self.attn_mode!r}) must be "
+            "gather_q|gather_kv|auto|ring|local")
+        assert self.attn_mode != "local" or model_size == 1, (
+            "attn_mode='local' runs attention without any cross-device KV "
+            "movement, which is only executable at model_size == 1 — on a "
+            "wider mesh pick ring/gather_q/gather_kv (DESIGN.md §15)")
 
 
 # ---------------------------------------------------------------------------

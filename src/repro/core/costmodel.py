@@ -295,3 +295,91 @@ def chunk_time_est(flops: float, bytes_moved: float, hw: Hardware,
     """Roofline-max execution time + kernel overheads (Fig. 7 shape)."""
     return max(flops / hw.peak_flops_bf16, bytes_moved / hw.hbm_bw) \
         + n_ops * hw.kernel_launch_us * 1e-6
+
+
+# ---------------------------------------------------------------------------
+# Ring-distributed attention (DESIGN.md §15) — KV bytes-per-hop, the
+# causality hop schedule, and the per-stage HBM demand of each attn_mode
+# ---------------------------------------------------------------------------
+
+
+def kv_bytes_per_token(cfg, itemsize: int = ACT_ITEMSIZE) -> float:
+    """Bytes/token/layer of the position-tagged KV cache rows (k + v; the
+    MLA cache stores the shared latent [c_kv | k_rope] once — v aliases
+    k, so the latent width counts a single time)."""
+    if cfg.mla is not None:
+        return (cfg.mla.kv_lora_rank + cfg.mla.rope_head_dim) * itemsize
+    return 2 * cfg.n_kv_heads * cfg.hd * itemsize
+
+
+def ring_hop_bytes(cfg, kv_tokens_local: float, batch: int) -> float:
+    """Wire bytes one rank sends per ring hop for one layer's attention:
+    its resident KV block (batch x local tokens x kv rows) plus the int32
+    position tags that travel with it (the tags are batch-invariant)."""
+    return (batch * kv_tokens_local * kv_bytes_per_token(cfg)
+            + kv_tokens_local * 4)
+
+
+def ring_hop_fractions(sp: int, *, causal: bool = True,
+                       layout: str = "zigzag") -> list:
+    """Per-hop compute fraction (of one full KV block against the local
+    queries) that the *slowest* rank must execute — the lock-step cost of
+    hop h is the max over ranks, because the next ppermute is a barrier.
+
+    block-contiguous layout: under causal masking rank sp−1's queries see
+    every arriving block in full, so each hop costs a whole block and late
+    ranks serialize the ring — sum = sp.
+    zigzag (striped) layout: each rank owns an interleaved mix of early and
+    late positions, so every arriving block is ~half visible everywhere and
+    per-hop cost balances at 1/2 (+1/(2·sp) on the self hop for the
+    unskippable diagonal tiles) — sum ≈ (sp+1)/2, the causal discount.
+    Non-causal attention has no skippable pairs in either layout.
+
+    The executed ring (parallel/ring.py) cannot skip hops — the rank index
+    is traced and collectives are lock-step — so it runs all sp hops with
+    positional masking; this table is the *pricing* of that masking."""
+    if sp <= 1:
+        return [1.0]
+    if not causal or layout == "block":
+        return [1.0] * sp
+    assert layout == "zigzag", layout
+    return [0.5 + 0.5 / sp] + [0.5] * (sp - 1)
+
+
+def stage_attn_demand(cfg, *, seq_len: int, batch: int, sp: int, pp: int,
+                      mode: str, n_params: int = None) -> dict:
+    """Per-device HBM demand (bytes) of running attention over a
+    ``seq_len``-token visible context under each attn_mode — the §15
+    memory model that decides which modes a cell can even admit.
+
+      params        parameter shard residency (bf16, sharded over the
+                    stage grid and the model axis);
+      kv_cache      the position-tagged Type-0 cache one stage must keep
+                    resident through the whole sequence: full visible KV
+                    under "local" (no collectives exist to reassemble
+                    shards), 1/sp of it for every distributed mode;
+      attn_transient  the largest per-layer working set one attention call
+                    materializes on top of the cache: the gathered full KV
+                    (gather_kv), two blocks — resident + in flight — for
+                    the ring, one remote query/merge-buffer shard for
+                    gather_q, nothing extra for local (the cache IS the
+                    working set).
+    """
+    assert mode in ("local", "gather_q", "gather_kv", "auto", "ring"), mode
+    row = kv_bytes_per_token(cfg)
+    layers = cfg.n_layers / pp
+    params = (n_params * ACT_ITEMSIZE / (pp * sp)) if n_params else 0.0
+    if mode == "local":
+        kv_cache = batch * seq_len * row * layers
+        transient = 0.0
+    else:
+        kv_cache = batch * (seq_len / sp) * row * layers
+        if mode == "gather_kv":
+            transient = batch * seq_len * row
+        elif mode == "ring":
+            transient = 2.0 * batch * (seq_len / sp) * row
+        else:  # gather_q / auto: the remote query shard + merge buffers
+            transient = batch * (seq_len / sp) * row
+    total = params + kv_cache + transient
+    return {"params": params, "kv_cache": kv_cache,
+            "attn_transient": transient, "total": total}

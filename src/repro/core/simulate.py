@@ -35,6 +35,7 @@ BWD = "bwd"
 D2H = "d2h"
 H2D = "h2d"
 P2P = "p2p"
+RING = "ring"
 
 
 @dataclass(frozen=True)
@@ -65,6 +66,10 @@ class SimResult:
     peak_units: tuple            # per-stage forward-pass peak activation units
     peak_units_full: tuple       # per-stage peak over fwd+bwd (with reloads)
     trace: tuple                 # LaneEvent timeline, time-sorted
+    ring_stall: float = 0.0      # compute delay from exposed ring-attention
+                                 # KV rotation (DESIGN.md §15) — the per-hop
+                                 # transfer time ring_overlap could not hide
+                                 # under the hop compute
 
     @property
     def bubble_ratio(self) -> float:
@@ -88,6 +93,42 @@ def _xfer(nbytes: float, bw: Optional[float]) -> float:
     return nbytes / bw
 
 
+def ring_overlap(hop_compute: Sequence[float],
+                 hop_xfer: Sequence[float]
+                 ) -> Tuple[float, float, list]:
+    """Per-hop playout of one layer's ring attention (DESIGN.md §15).
+
+    hop_compute[h]: tile-compute seconds of hop h (the slowest rank's share
+    — costmodel.ring_hop_fractions).  hop_xfer[h]: ICI transfer seconds of
+    hop h's KV block (hop 0's block is already resident, so 0).
+
+    Double-buffer recurrence: the send of hop h+1's block is issued at hop
+    h's compute *start* (the executed schedule issues the ppermute before
+    the partial-attention call), the link serializes transfers, and hop h's
+    compute cannot start before its block has arrived.  Returns
+    (wall, exposed, events): wall = attention wall time, exposed = wall
+    minus total compute (the stall the chunk's critical path inherits),
+    events = (kind, hop, start, end) intervals for tracing."""
+    n = len(hop_compute)
+    arrive = [0.0] * n
+    link_free = 0.0
+    t = 0.0
+    exposed = 0.0
+    events = []
+    for h in range(n):
+        start = max(t, arrive[h])
+        exposed += start - t
+        events.append(("compute", h, start, start + hop_compute[h]))
+        if h + 1 < n:
+            s0 = max(link_free, start)
+            arrive[h + 1] = s0 + hop_xfer[h + 1]
+            link_free = arrive[h + 1]
+            if hop_xfer[h + 1]:
+                events.append(("xfer", h + 1, s0, arrive[h + 1]))
+        t = start + hop_compute[h]
+    return t, exposed, events
+
+
 def simulate(events: Sequence[Tuple[int, int, int]],
              chunk_costs: Sequence[float],
              *,
@@ -100,7 +141,10 @@ def simulate(events: Sequence[Tuple[int, int, int]],
              ici_bw: Optional[float] = None,
              bwd_ratio: float = 2.0,
              prefetch: str = "ahead",
-             off_wire_ratio: float = 1.0) -> SimResult:
+             off_wire_ratio: float = 1.0,
+             ring_t: Optional[Sequence[float]] = None,
+             ring_exposed: Optional[Sequence[float]] = None,
+             ring_bwd_exposed: Optional[Sequence[float]] = None) -> SimResult:
     """Play `events` through a pp-stage pipeline.
 
     events: (chunk, sub, n_sub) feed order for stage 0 (see
@@ -124,6 +168,16 @@ def simulate(events: Sequence[Tuple[int, int, int]],
         transfer *volumes*; the memory recurrence stays in raw device
         units because what materializes and drains on device is the
         uncompressed tagged set (dequantization reconstructs full rows).
+    ring_t / ring_exposed / ring_bwd_exposed: the ring-attention lane
+        (DESIGN.md §15), per chunk.  ring_t is the total KV-rotation wire
+        seconds of the chunk's attention (all hops, all resident layers) —
+        drawn as a "ring" lane interval concurrent with the chunk's
+        compute.  ring_exposed / ring_bwd_exposed are the parts the
+        per-hop playout (``ring_overlap``, run upstream by the solver)
+        could NOT hide under hop compute: they extend the chunk's forward /
+        backward compute and accumulate into ``ring_stall``.  (The backward
+        re-rotates the blocks — the remat'd attention backward replays the
+        ring — so it carries its own lane occupancy and exposure.)
 
     Forward runs events in feed order, backward in reverse (the runner
     differentiates an unrolled forward loop, so each stage finishes all
@@ -150,12 +204,18 @@ def simulate(events: Sequence[Tuple[int, int, int]],
              for c, _, ns in events]
     p2p_t = [_xfer((p2p_bytes[c] if p2p_bytes else 0.0) / ns, ici_bw)
              for c, _, ns in events]
+    rng_t = [(ring_t[c] if ring_t else 0.0) / ns for c, _, ns in events]
+    rexp_f = [(ring_exposed[c] if ring_exposed else 0.0) / ns
+              for c, _, ns in events]
+    rexp_b = [(ring_bwd_exposed[c] if ring_bwd_exposed else 0.0) / ns
+              for c, _, ns in events]
 
     trace: List[LaneEvent] = []
     busy = [0.0] * pp
     first_start = [0.0] * pp
     last_end = [0.0] * pp
     d2h_stall = h2d_stall = p2p_stall = 0.0
+    ring_stall = 0.0
     # per-stage memory deltas: (time, priority, delta, phase); priority 0
     # applies drains before materializations at timestamp ties, so an
     # offload that exactly fills its hiding window is credited before the
@@ -184,7 +244,11 @@ def simulate(events: Sequence[Tuple[int, int, int]],
                 wire = arrival[s][e] - fwd_end[s - 1][e]
                 p2p_stall += min(wire, arrival[s][e] - max(comp_free, gate))
             start = max(ready, gate)
-            end = start + fcost[e]
+            end = start + fcost[e] + rexp_f[e]
+            ring_stall += rexp_f[e]
+            if rng_t[e]:
+                trace.append(LaneEvent(s, RING, c, sub, ns, start,
+                                       start + rng_t[e]))
             if e == 0:
                 first_start[s] = start
             fwd_end[s][e] = end
@@ -254,7 +318,11 @@ def simulate(events: Sequence[Tuple[int, int, int]],
                     h2d_stall += h2d_done[e] - ready
                 start = max(ready, h2d_done[e])
                 prev_bwd_start = start
-                end = start + bcost[e]
+                end = start + bcost[e] + rexp_b[e]
+                ring_stall += rexp_b[e]
+                if rng_t[e]:
+                    trace.append(LaneEvent(s, RING, c, sub, ns, start,
+                                           start + rng_t[e]))
                 bwd_end[s][e] = end
                 comp_free = end
                 busy[s] += bcost[e]
@@ -298,6 +366,7 @@ def simulate(events: Sequence[Tuple[int, int, int]],
         peak_units=tuple(peaks_fwd),
         peak_units_full=tuple(peaks_full),
         trace=tuple(trace),
+        ring_stall=ring_stall,
     )
 
 

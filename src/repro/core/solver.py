@@ -65,7 +65,8 @@ def simulate_candidate(cfg, seq_len: int, batch: int, n_params: int,
                        prefetch: str = "ahead",
                        offload_dtype: str = "none",
                        moments_dtype: str = "none",
-                       doc_lens=None
+                       doc_lens=None,
+                       attn_mode: str = "gather_q"
                        ) -> Tuple[float, tuple, sim.SimResult]:
     """Build the candidate's cost/activation profile and play it out.
 
@@ -87,7 +88,16 @@ def simulate_candidate(cfg, seq_len: int, batch: int, n_params: int,
     workload cell (DESIGN.md §13): the documents are greedily packed into
     ``batch`` rows of ``seq_len``, the per-position causal-sawtooth cost
     profile replaces the single triangle, and chunk boundaries / offload
-    ratios are balanced over that measured profile."""
+    ratios are balanced over that measured profile.
+
+    attn_mode="ring" (DESIGN.md §15) adds the ring-attention lane: per
+    chunk, the sp-hop KV rotation is played out by ``sim.ring_overlap``
+    (hop h+1's P2P overlaps hop h's compute on a serialized link), the
+    per-hop compute is discounted by the zig-zag causal hop fractions, and
+    the per-chunk (occupancy, exposed-fwd, exposed-bwd) triple is handed to
+    the schedule simulator's ring lane.  Other modes price no attention
+    collectives beyond the baseline (gather/all-gather traffic is small
+    against the chunk compute at solver scale)."""
     r = part.flops_per_token_ratio(cfg)
     tok_flops = cm.model_flops_per_token(n_params, train=True)
     chips = sp * pp
@@ -141,12 +151,34 @@ def simulate_candidate(cfg, seq_len: int, batch: int, n_params: int,
     # per-device inter-stage hand-off payload: hidden states of the chunk
     p2p = ([2 * batch * ln * cfg.d_model / sp for ln in sched.lengths]
            if pp > 1 else None)
+    ring_t = ring_exposed = ring_bwd_exposed = None
+    if attn_mode == "ring" and sp > 1:
+        layers = cfg.n_layers / pp
+        fracs = cm.ring_hop_fractions(sp, causal=True, layout="zigzag")
+        ring_t, ring_exposed, ring_bwd_exposed = [], [], []
+        kv_end = 0
+        for ln in sched.lengths:
+            kv_end += ln
+            hop_bytes = cm.ring_hop_bytes(cfg, kv_end / sp, batch)
+            xfer = [0.0] + [hop_bytes / hw.ici_bw] * (sp - 1)
+            # per-hop attention flops: local queries x one KV block
+            hop_flops = (4.0 * batch * (ln / sp) * (kv_end / sp)
+                         * cfg.n_heads * cfg.head_dim)
+            comp_f = [f * hop_flops / hw.peak_flops_bf16 for f in fracs]
+            comp_b = [c * cm.ATTN_BWD_RATIO for c in comp_f]
+            _, exp_f, _ = sim.ring_overlap(comp_f, xfer)
+            _, exp_b, _ = sim.ring_overlap(comp_b, xfer)
+            ring_t.append(layers * sum(xfer))
+            ring_exposed.append(layers * exp_f)
+            ring_bwd_exposed.append(layers * exp_b)
     res = sim.simulate_schedule(
         times, pp=pp, msp=msp, split=msp_split,
         chunk_acts=act, alphas=alphas,
         d2h_bw=hw.d2h_bw, p2p_bytes=p2p, ici_bw=hw.ici_bw,
         bwd_ratio=bwd_ratio, prefetch=prefetch,
-        off_wire_ratio=wire_ratio)
+        off_wire_ratio=wire_ratio,
+        ring_t=ring_t, ring_exposed=ring_exposed,
+        ring_bwd_exposed=ring_bwd_exposed)
     total = res.total
     if offload_moments:
         total += sim.opt_update_transfer(
@@ -155,6 +187,56 @@ def simulate_candidate(cfg, seq_len: int, batch: int, n_params: int,
                                            row_len=cfg.d_model),
             hw.d2h_bw)
     return total, alphas, res
+
+
+def admit_attn_mode(cfg, seq_len: int, batch: int, n_params: int,
+                    pp: int, sp: int, hw: cm.Hardware = cm.V5E,
+                    modes: tuple = ("local", "gather_kv", "ring")) -> dict:
+    """Per-stage HBM admission for each attention schedule (DESIGN.md §15).
+
+    Returns ``{mode: (fits, demand_dict)}`` where the demand comes from
+    ``costmodel.stage_attn_demand`` — the resident KV cache plus the
+    schedule's transient (gathered KV / in-flight ring blocks) plus the
+    stage's parameter shard, checked against ``hw.hbm_bytes``.  This is the
+    gate that rejects a multi-million-token cell at ``attn_mode="local"``
+    (full visible KV on every device) while admitting it at ``"ring"``
+    (one resident shard + two in-flight blocks)."""
+    out = {}
+    for mode in modes:
+        d = cm.stage_attn_demand(cfg, seq_len=seq_len, batch=batch, sp=sp,
+                                 pp=pp, mode=mode, n_params=n_params)
+        out[mode] = (d["total"] <= hw.hbm_bytes, d)
+    return out
+
+
+def choose_attn_mode(cfg, seq_len: int, batch: int, n_params: int,
+                     pp: int, n: int, sp: int,
+                     hw: cm.Hardware = cm.V5E, *,
+                     modes: tuple = ("local", "ring"),
+                     **kw) -> Tuple[str, dict]:
+    """Pick the fastest attention schedule among those that fit in HBM.
+
+    Every mode in ``modes`` is first screened by ``admit_attn_mode``; the
+    admitted ones are played out by ``simulate_candidate`` (extra solver
+    kwargs pass through) and the fastest wins.  Returns ``(mode, report)``
+    with the per-mode admission verdicts, demands, and simulated times."""
+    admitted = admit_attn_mode(cfg, seq_len, batch, n_params, pp, sp, hw,
+                               modes=modes)
+    best = None
+    report = {}
+    for mode in modes:
+        ok, demand = admitted[mode]
+        if not ok:
+            report[mode] = dict(admitted=False, demand=demand)
+            continue
+        t, _, _ = simulate_candidate(cfg, seq_len, batch, n_params, pp, n,
+                                     sp, hw, attn_mode=mode, **kw)
+        report[mode] = dict(admitted=True, demand=demand, est_time=t)
+        if best is None or t < best[1]:
+            best = (mode, t)
+    assert best is not None, (
+        f"no attention mode in {modes} fits in {hw.hbm_bytes} bytes of HBM")
+    return best[0], report
 
 
 def solve(cfg, seq_len: int, batch: int, n_params: int,

@@ -88,6 +88,15 @@ def main(argv=None):
                          "via the tick-level custom_vjp seam (default); "
                          "sync = autodiff placement, each chunk reloads at "
                          "its own backward")
+    ap.add_argument("--attn-mode", default=None,
+                    choices=["gather_q", "gather_kv", "auto", "ring",
+                             "local"],
+                    help="distributed attention schedule (DESIGN.md §15): "
+                         "gather_q = flash-decoding merge (default); "
+                         "gather_kv = all-gather the KV shard; auto = "
+                         "byte-count switch; ring = rotate KV blocks via "
+                         "ppermute (beyond-one-stage contexts); local = no "
+                         "attention collectives (model axis 1 only)")
     ap.add_argument("--msp", action="store_true",
                     help="multiplexed sequence partitioning (pp > 1 only). "
                          "NOTE: on the lock-step SPMD runner the ramp "
@@ -135,6 +144,8 @@ def main(argv=None):
             # compressed moments imply the explicit host-residency path
             overrides.setdefault("offload_moments", True)
             overrides.setdefault("moments_mode", "explicit")
+    if args.attn_mode:
+        overrides["attn_mode"] = args.attn_mode
     if args.msp:
         overrides["msp"] = True
         overrides["msp_split"] = args.msp_split

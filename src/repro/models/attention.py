@@ -99,6 +99,15 @@ def dist_attention(q, k_loc, v_loc, q_pos, kv_pos, ctx: Ctx, *, causal=True,
         k_loc, v_loc, kv_pos = (k_loc[:, :kv_view], v_loc[:, :kv_view],
                                 kv_pos[:kv_view])
     mode = _pick_mode(ctx, q, k_loc, kv_view)
+    if mode == "ring" and ctx.sp > 1:
+        # rotate the KV shard around the model axis (DESIGN.md §15): no
+        # device ever materializes more than two KV blocks, so the chunk's
+        # visible extent is no longer bounded by one stage's HBM.  q, q_pos
+        # and q_start are query-side and stay local.
+        from repro.parallel import ring as _ring
+        return _ring.ring_attention(q, k_loc, v_loc, q_pos, kv_pos, ctx,
+                                    causal=causal, scale=scale,
+                                    q_start=q_start)
     if mode == "gather_kv" and ctx.sp > 1:
         # gather the (narrow, GQA) KV shard; attention is then fully local
         # to this rank's query rows — zero merge collectives.  q_start is

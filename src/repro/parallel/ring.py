@@ -1,0 +1,142 @@
+"""Ring-distributed chunked attention (DESIGN.md §15, FPDT arxiv 2408.16978).
+
+The gather modes in models/attention.py move either the queries or the whole
+visible KV through one collective, so some device always materializes the
+full KV extent of the chunk — which is exactly what caps per-stage sequence
+length.  The ring schedule never gathers: each rank keeps its sequence shard
+of (k, v, kv_pos) and the shards *rotate* around the model axis via
+``ppermute``, one hop per step.  At hop h rank r holds the block that
+originated on rank (r − h) mod sp; the arriving block is consumed by one
+``attention_partial`` call and its (o, m, l) triple is scattered into a
+per-source buffer.  After sp hops every rank has seen every block and folds
+the buffers once, in canonical source order, via ``merge_partials``.
+
+Why fold from buffers instead of streaming the running merge: float addition
+is not associative, so a running fold would make the result depend on the
+*arrival* order of the blocks — which is rank-dependent in a ring.  The
+canonical-order fold makes the output bit-identical on every rank and under
+every rotation of the arrival sequence (tests/test_kernel_grads.py
+hypothesis-checks exactly this invariance through ``fold_arrivals``).  The
+buffers are query-chunk-sized (same scale as the gather_q merge buffers);
+the KV working set — the term that scales with context — stays at two
+blocks: the resident block and the one in flight.
+
+Overlap: the ppermute for hop h+1 is issued *before* hop h's attention
+compute.  The two have no data dependency, so XLA is free to run the ICI
+transfer under the tile compute — the double-buffer recurrence that
+``core/simulate.ring_overlap`` prices per hop.
+
+Causality / hop skipping: in the lock-step SPMD program no hop is globally
+skippable — every hop's block carries visible KV from earlier chunks for at
+least one rank (and rank sp−1 needs all of them), and a traced rank index
+cannot prune a collective.  The executed ring therefore runs all sp hops
+and lets the kernels' positional masking zero the invisible pairs; the
+causality rule lives in the *pricing*: ``costmodel.ring_hop_fractions``
+gives the per-hop compute fraction the slowest rank must execute under a
+block-contiguous layout (late ranks serialize: every hop costs a full
+block) vs the striped/zig-zag assignment (balanced: ~half a block per hop),
+and the solver charges the zig-zag schedule.
+
+Gradients are training-grade: ppermute's VJP is the inverse permutation,
+the scatter is a dynamic_update_slice, the per-hop partials differentiate
+on both kernel backends, and the max statistics are gradient-frozen per the
+``merge_partials`` contract (kernels/ref.py).
+"""
+from __future__ import annotations
+
+from typing import List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops as kops
+from repro.kernels.ref import NEG_INF, merge_partials, normalize
+from repro.parallel.ctx import Ctx
+
+
+def ring_perm(sp: int) -> List[Tuple[int, int]]:
+    """One-hop rotation on the model axis: rank i sends to rank i+1, so
+    after h hops rank r holds the block that originated on (r − h) mod sp."""
+    return [(i, (i + 1) % sp) for i in range(sp)]
+
+
+def _merge_buffers(o_buf, m_buf, l_buf):
+    """Fold source-indexed (o, m, l) buffers in canonical block order.
+
+    This is THE fold of the ring schedule: because every path through the
+    ring scatters into the same canonical slots, the merge graph — and
+    hence the result, bitwise — is independent of the order the blocks
+    arrived in."""
+    n = o_buf.shape[0]
+    return merge_partials([(o_buf[i], m_buf[i], l_buf[i]) for i in range(n)])
+
+
+def fold_arrivals(parts: Sequence[Tuple[jax.Array, jax.Array, jax.Array]],
+                  sources: Sequence[int], n_blocks: int = None):
+    """Fold per-block partials exactly the way the executed ring does.
+
+    parts: (o, m, l) triples in *arrival* order; sources[i] is the canonical
+    block id of parts[i] (each id written exactly once).  Returns the merged
+    (o, m, l) — bit-identical for every permutation of the arrival order,
+    the invariance the ring schedule silently depends on."""
+    n = n_blocks if n_blocks is not None else len(parts)
+    o0, m0, l0 = parts[0]
+    o_buf = jnp.zeros((n,) + tuple(o0.shape), jnp.float32)
+    m_buf = jnp.full((n,) + tuple(m0.shape), NEG_INF, jnp.float32)
+    l_buf = jnp.zeros((n,) + tuple(l0.shape), jnp.float32)
+    for (o, m, l), s in zip(parts, sources):
+        o_buf = jax.lax.dynamic_update_index_in_dim(
+            o_buf, o.astype(jnp.float32), s, 0)
+        m_buf = jax.lax.dynamic_update_index_in_dim(
+            m_buf, m.astype(jnp.float32), s, 0)
+        l_buf = jax.lax.dynamic_update_index_in_dim(
+            l_buf, l.astype(jnp.float32), s, 0)
+    return _merge_buffers(o_buf, m_buf, l_buf)
+
+
+def ring_attention(q, k_loc, v_loc, q_pos, kv_pos, ctx: Ctx, *, causal=True,
+                   scale=None, q_start=None):
+    """Ring-distributed attention over the model axis.
+
+    q/q_pos/q_start stay local (query-side, like gather_kv); the KV shard
+    (k_loc, v_loc, kv_pos) rotates.  Shapes as in dist_attention; returns
+    the normalized output for this rank's query shard [B, Tq_loc, H, hd_v].
+    Degenerates to a single partial + normalize at sp == 1 (the oracle
+    property every executed mode here shares)."""
+    sp = ctx.sp
+    if not ctx.distributed or sp == 1:
+        o, m, l = kops.attention_partial(q, k_loc, v_loc, q_pos, kv_pos,
+                                         causal=causal, scale=scale,
+                                         q_start=q_start)
+        return normalize(o, l).astype(q.dtype)
+
+    perm = ring_perm(sp)
+    rank = ctx.model_index()
+    B, Tq, H = q.shape[0], q.shape[1], q.shape[2]
+    hdv = v_loc.shape[-1]
+    o_buf = jnp.zeros((sp, B, Tq, H, hdv), jnp.float32)
+    m_buf = jnp.full((sp, B, Tq, H), NEG_INF, jnp.float32)
+    l_buf = jnp.zeros((sp, B, Tq, H), jnp.float32)
+
+    k_cur, v_cur, p_cur = k_loc, v_loc, kv_pos
+    for h in range(sp):
+        # issue the next hop's rotation BEFORE this hop's compute: the two
+        # have no data dependency, so the ICI transfer overlaps the tile
+        # compute (the double-buffer recurrence simulate.ring_overlap prices)
+        if h + 1 < sp:
+            k_nxt = ctx.ppermute_model(k_cur, perm)
+            v_nxt = ctx.ppermute_model(v_cur, perm)
+            p_nxt = ctx.ppermute_model(p_cur, perm)
+        o_h, m_h, l_h = kops.attention_partial(q, k_cur, v_cur, q_pos, p_cur,
+                                               causal=causal, scale=scale,
+                                               q_start=q_start)
+        # canonical slot of the block now resident here: its source rank
+        src = jax.lax.rem(rank - h + sp, sp)
+        o_buf = jax.lax.dynamic_update_index_in_dim(o_buf, o_h, src, 0)
+        m_buf = jax.lax.dynamic_update_index_in_dim(m_buf, m_h, src, 0)
+        l_buf = jax.lax.dynamic_update_index_in_dim(l_buf, l_h, src, 0)
+        if h + 1 < sp:
+            k_cur, v_cur, p_cur = k_nxt, v_nxt, p_nxt
+
+    o, m, l = _merge_buffers(o_buf, m_buf, l_buf)
+    return normalize(o, l).astype(q.dtype)

@@ -23,6 +23,20 @@ except ImportError:  # pragma: no cover - depends on environment
     sys.modules["hypothesis.strategies"] = _hypothesis_stub
     _hypothesis_stub.strategies = _hypothesis_stub
 
+# the weekly slow CI leg reruns the property suites with a deeper budget:
+# HYPOTHESIS_PROFILE=nightly raises max_examples for every @given that does
+# not pin its own (tests that pin max_examples in @settings keep their pin —
+# that is hypothesis' documented precedence, so per-test budgets stay exact).
+# hasattr-guarded: the deterministic stub has no profile machinery.
+from hypothesis import settings as _hyp_settings  # noqa: E402
+
+if hasattr(_hyp_settings, "register_profile"):
+    _hyp_settings.register_profile("nightly", max_examples=300,
+                                   deadline=None)
+    _profile = os.environ.get("HYPOTHESIS_PROFILE")
+    if _profile:
+        _hyp_settings.load_profile(_profile)
+
 import jax  # noqa: E402
 
 import pytest  # noqa: E402

@@ -16,6 +16,7 @@ dq/dk for the winning block (finite-difference checked).
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.kernels.flash_attention import flash_attention_partial
@@ -199,3 +200,56 @@ def test_merge_partials_grad_finite_difference():
     num = (loss_q(q + eps * u) - loss_q(q - eps * u)) / (2 * eps)
     ana = jnp.sum(g * u)
     np.testing.assert_allclose(float(ana), float(num), rtol=2e-2, atol=2e-3)
+
+
+@pytest.mark.ring
+@settings(deadline=None)  # max_examples inherited: nightly raises it
+@given(st.integers(2, 5),        # number of KV shards in the ring
+       st.integers(0, 11))       # arrival order: rotation or a shuffle
+def test_ring_fold_is_arrival_order_invariant(n_shards, order_seed):
+    """The ring schedule's silent dependency (DESIGN.md §15): folding the
+    same KV shards in *any* arrival order — each rank sees a different
+    rotation of the ring — must give bit-identical (o, m, l) and, through
+    them, bit-identical gradients.  fold_arrivals scatters every block into
+    its canonical source slot before the single merge, so the merge graph
+    never sees the arrival order; this property-checks exactly that."""
+    from repro.parallel.ring import fold_arrivals
+
+    B, H, Hkv, hd = 1, 4, 2, 16
+    S = 8 * n_shards
+    Tq = 8
+    ks = jax.random.split(jax.random.PRNGKey(order_seed + 17 * n_shards), 4)
+    q = jax.random.normal(ks[0], (B, Tq, H, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, Hkv, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, Hkv, hd), jnp.float32)
+    w = jax.random.normal(ks[3], (B, Tq, H, hd), jnp.float32)
+    q_pos = jnp.arange(Tq, dtype=jnp.int32) + S - Tq  # sees every shard
+    kv_pos = jnp.arange(S, dtype=jnp.int32)
+
+    canonical = list(range(n_shards))
+    rot = order_seed % n_shards
+    order = canonical[rot:] + canonical[:rot]
+    if order_seed >= 6:  # beyond rotations: arbitrary permutations too
+        rng = np.random.RandomState(order_seed)
+        order = list(rng.permutation(n_shards))
+
+    def fold(k, order):
+        parts = []
+        for s in order:
+            sl = slice(s * 8, (s + 1) * 8)
+            parts.append(attention_partial_ref(
+                q, k[:, sl], v[:, sl], q_pos, kv_pos[sl], causal=True))
+        return fold_arrivals(parts, order, n_blocks=n_shards)
+
+    def loss(k, order):
+        o, _, l = fold(k, order)
+        return jnp.sum(normalize(o, l) * w)
+
+    o_a, m_a, l_a = fold(k, canonical)
+    o_b, m_b, l_b = fold(k, order)
+    np.testing.assert_array_equal(np.asarray(o_a), np.asarray(o_b))
+    np.testing.assert_array_equal(np.asarray(m_a), np.asarray(m_b))
+    np.testing.assert_array_equal(np.asarray(l_a), np.asarray(l_b))
+    g_a = jax.grad(loss)(k, canonical)
+    g_b = jax.grad(loss)(k, order)
+    np.testing.assert_array_equal(np.asarray(g_a), np.asarray(g_b))
