@@ -267,6 +267,71 @@ def quant_reduction_check(gate: dict, cell, led, out_dir: str) -> list:
     return failures
 
 
+def run_serve_gate(gate: dict, out_dir: str, update: bool) -> list:
+    """Type-0 honesty gate (DESIGN.md §16): serve a seeded trace through
+    the continuous-batching engine, measure the paged KV pool's real
+    per-rank device bytes, and hold them to the cost model's closed form
+    (``costmodel.kv_pool_bytes``) within ``max_ratio`` — plus the budget
+    band against the value pinned in budgets.json.  The pool ledger CSV
+    (kv_pool_* summary rows) lands in the artifact next to the train
+    ledgers."""
+    import numpy as np
+
+    from repro.launch import serve as serve_mod
+    from repro.launch.mesh import make_test_mesh
+
+    name = gate["name"]
+    mesh = make_test_mesh(gate["data_size"], gate["model_size"])
+    eng = serve_mod.ServeEngine(
+        gate["arch"], mesh, s_bucket=gate["s_bucket"],
+        slots=gate["slots"], max_new=gate["max_new"],
+        block_tokens=gate["block_tokens"],
+        reduced=gate.get("reduced", True))
+    rng = np.random.default_rng(gate.get("seed", 0))
+    reqs = []
+    for i in range(gate.get("n_requests", 5)):
+        plen = int(rng.integers(4, gate["s_bucket"] + 1))
+        reqs.append(serve_mod.Request(
+            rid=i, prompt=rng.integers(
+                2, eng.cfg.vocab_size, size=plen).astype(np.int32),
+            max_new=int(rng.integers(1, gate["max_new"] + 1)),
+            arrival=int(rng.integers(0, 4))))
+    _, stats = eng.run(reqs, mode="continuous")
+
+    measured = stats.pool_bytes
+    predicted = eng.predicted_pool_bytes()
+    led = ml.MemLedger(pool=ml.PoolChannel(
+        n_blocks=eng.geo.n_blocks, block_tokens=eng.geo.block_tokens,
+        n_layers=eng.mdef.slots_per_stage(1), measured_bytes=measured,
+        predicted_bytes=predicted, peak_blocks=max(stats.peak_blocks),
+        total_blocks=sum(stats.total_blocks)))
+    led.to_csv(os.path.join(out_dir, f"memledger-{name}.csv"))
+    ratio = measured / max(predicted, 1)
+    print(f"{name:32s} pool     {measured:>12d} B  "
+          f"predicted {predicted:>14.0f} B  ratio {ratio:.4f}  "
+          f"{stats.steps} steps / {stats.waves} waves, blocks peak "
+          f"{max(stats.peak_blocks)} of {eng.geo.n_blocks}")
+    failures = []
+    if ratio > gate["max_ratio"]:
+        failures.append(
+            f"{name}: measured pool {measured} B exceeds "
+            f"{gate['max_ratio']:.2f}x the cost model's predicted "
+            f"{predicted:.0f} B (ratio {ratio:.4f}) — kv_pool_bytes no "
+            "longer describes the device arrays")
+    if update:
+        gate["measured_pool_bytes"] = int(measured)
+        gate["predicted_pool_bytes"] = int(predicted)
+    else:
+        want = gate.get("measured_pool_bytes")
+        band = gate.get("band", 0.02)
+        if want and abs(measured - want) > band * want:
+            failures.append(
+                f"{name}: measured pool {measured} B deviates more than "
+                f"{band:.0%} from the budgeted {want} B — if intentional, "
+                "regenerate with `python -m benchmarks.memgate --update`")
+    return failures
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--budgets", default="benchmarks/budgets.json")
@@ -282,6 +347,9 @@ def main(argv=None):
     failures = []
     for gate in budgets["gates"]:
         name = gate["name"]
+        if gate.get("kind") == "serve":
+            failures.extend(run_serve_gate(gate, args.out, args.update))
+            continue
         measured, predicted, led, cell = run_gate(gate)
         led.to_csv(os.path.join(args.out, f"memledger-{name}.csv"))
         ratio = measured / max(predicted, 1)

@@ -17,6 +17,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 from benchmarks import figures  # noqa: E402
 from benchmarks.bench_attention import bench_attention  # noqa: E402
 from benchmarks.bench_offload_quant import bench_offload_quant  # noqa: E402
+from benchmarks.bench_serving import bench_serving  # noqa: E402
 from benchmarks.bench_varlen import bench_varlen  # noqa: E402
 
 
@@ -43,6 +44,8 @@ def main() -> None:
          lambda: bench_varlen(measure=not args.fast)[:2]),
         ("bench_offload_quant",
          lambda: bench_offload_quant(measure=not args.fast)),
+        ("bench_serving",
+         lambda: bench_serving(measure=not args.fast)[:2]),
     ]
     all_rows = []
     texts = []

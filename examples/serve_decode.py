@@ -2,9 +2,12 @@
 
   PYTHONPATH=src python examples/serve_decode.py
 
-Shows: chunked prefill filling the position-tagged sequence-sharded cache,
-then single-token decode steps appending striped slots — the same
-serve_step the decode_32k / long_500k dry-run cells lower.
+Shows both decode engines over the same step functions (DESIGN.md §16):
+the static lock-step path — chunked prefill filling the position-tagged
+sequence-sharded cache, then single-token decode steps appending striped
+slots — and the paged-pool continuous-batching engine, which admits
+requests into freed slots mid-flight and shares device memory through
+per-request block tables.
 """
 import os
 
@@ -19,7 +22,16 @@ def main():
         "--mesh", "2x2", "--prompt-len", "128",
         "--batch", "4", "--decode-steps", "12",
     ])
-    print(f"\nserved {out.shape[0]} sequences x {out.shape[1]} new tokens")
+    print(f"\nstatic: served {out.shape[0]} sequences x {out.shape[1]} "
+          "new tokens")
+
+    out = serve.main([
+        "--arch", "qwen2-7b", "--reduced",
+        "--mesh", "2x1", "--prompt-len", "64",
+        "--batch", "4", "--decode-steps", "8", "--continuous",
+    ])
+    print(f"continuous: served {out.shape[0]} sequences x {out.shape[1]} "
+          "new tokens through the paged pool")
 
 
 if __name__ == "__main__":

@@ -312,6 +312,21 @@ def kv_bytes_per_token(cfg, itemsize: int = ACT_ITEMSIZE) -> float:
     return 2 * cfg.n_kv_heads * cfg.hd * itemsize
 
 
+def kv_block_bytes(cfg, block_tokens: int,
+                   itemsize: int = ACT_ITEMSIZE) -> float:
+    """Device bytes of one paged-KV block on one rank for one layer
+    (runtime/kvpool.py): ``block_tokens`` logical cache slots, each holding
+    one token's k + v rows."""
+    return block_tokens * kv_bytes_per_token(cfg, itemsize)
+
+
+def kv_pool_bytes(cfg, n_blocks: int, block_tokens: int, n_layers: int,
+                  itemsize: int = ACT_ITEMSIZE) -> float:
+    """Per-rank device bytes of the whole paged KV pool — the Type-0
+    channel the memledger gates: every layer owns ``n_blocks`` blocks."""
+    return n_blocks * kv_block_bytes(cfg, block_tokens, itemsize) * n_layers
+
+
 def ring_hop_bytes(cfg, kv_tokens_local: float, batch: int) -> float:
     """Wire bytes one rank sends per ring hop for one layer's attention:
     its resident KV block (batch x local tokens x kv rows) plus the int32

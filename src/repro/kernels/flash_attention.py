@@ -206,12 +206,9 @@ def _geometry(Tq: int, S: int, block_q: int, block_k: int):
 
 def _pad_inputs(q, k, v, q_pos, kv_pos, q_start, Tqp, Sp):
     Tq, S = q.shape[1], k.shape[1]
-    if q_pos.ndim == 2:
-        # kernel assumes positions shared across batch; models pass [Tq]
-        q_pos = q_pos[0]
     if Tqp != Tq:
         q = jnp.pad(q, ((0, 0), (0, Tqp - Tq), (0, 0), (0, 0)))
-        q_pos = jnp.pad(q_pos, (0, Tqp - Tq), constant_values=-1)
+        q_pos = jnp.pad(q_pos, ((0, 0), (0, Tqp - Tq)), constant_values=-1)
         # block-padding query rows are dead: q_start = PAD_POS masks them
         q_start = jnp.pad(q_start, ((0, 0), (0, Tqp - Tq)),
                           constant_values=PAD_POS)
@@ -264,10 +261,11 @@ def _fwd_impl(q, k, v, q_pos, kv_pos, q_start, causal, scale, block_q,
         kern,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((None, bq), lambda b, i, j: (0, i)),          # q_pos
+            # q_pos and q_start vary per batch row (paged decode gives every
+            # row its own position; packed layouts differ row to row): grid
+            # axis 0 is B*Hkv, so row = b // Hkv
+            pl.BlockSpec((None, bq), lambda b, i, j, Hkv=Hkv: (b // Hkv, i)),
             pl.BlockSpec((bk,), lambda b, i, j: (j,)),                  # kv_pos
-            # q_start varies per batch row (packed layouts differ row to
-            # row): grid axis 0 is B*Hkv, so row = b // Hkv
             pl.BlockSpec((None, bq), lambda b, i, j, Hkv=Hkv: (b // Hkv, i)),
             pl.BlockSpec((None, None, G * bq, hdk), lambda b, i, j: (b, i, 0, 0)),
             pl.BlockSpec((None, bk, hdk), lambda b, i, j: (b, j, 0)),
@@ -289,8 +287,7 @@ def _fwd_impl(q, k, v, q_pos, kv_pos, q_start, causal, scale, block_q,
             pltpu.VMEM((G * bq, 1), jnp.float32),     # running sum
         ],
         interpret=interpret,
-    )(jnp.broadcast_to(q_pos[None, :], (1, Tqp)), kv_pos, q_start,
-      qg, kg, vg)
+    )(q_pos, kv_pos, q_start, qg, kg, vg)
 
     o = _unfold_q_like(o, B, Hkv, G, nq, bq, hdv, Tq)
     m = _unfold_q_like(m, B, Hkv, G, nq, bq, 1, Tq)[..., 0]
@@ -328,7 +325,7 @@ def _bwd_impl(q, k, v, q_pos, kv_pos, q_start, do, m, dl, causal, scale,
     dog = _fold_q_like(do.astype(jnp.float32), B, Hkv, G, nq, bq, hdv)
     mg = _fold_q_like(m[..., None], B, Hkv, G, nq, bq, 1)
     dlg = _fold_q_like(dl.astype(jnp.float32)[..., None], B, Hkv, G, nq, bq, 1)
-    qpos_b = jnp.broadcast_to(q_pos[None, :], (1, Tqp))
+    qpos_b = q_pos
 
     # --- dq: forward's grid, KV innermost, dq accumulates in scratch
     dq = pl.pallas_call(
@@ -336,7 +333,7 @@ def _bwd_impl(q, k, v, q_pos, kv_pos, q_start, do, m, dl, causal, scale,
                           g=G, nk=nk),
         grid=(B * Hkv, nq, nk),
         in_specs=[
-            pl.BlockSpec((None, bq), lambda b, i, j: (0, i)),
+            pl.BlockSpec((None, bq), lambda b, i, j, Hkv=Hkv: (b // Hkv, i)),
             pl.BlockSpec((bk,), lambda b, i, j: (j,)),
             pl.BlockSpec((None, bq), lambda b, i, j, Hkv=Hkv: (b // Hkv, i)),
             pl.BlockSpec((None, None, G * bq, hdk), lambda b, i, j: (b, i, 0, 0)),
@@ -360,7 +357,7 @@ def _bwd_impl(q, k, v, q_pos, kv_pos, q_start, do, m, dl, causal, scale,
                           g=G, nq=nq),
         grid=(B * Hkv, nk, nq),
         in_specs=[
-            pl.BlockSpec((None, bq), lambda b, j, i: (0, i)),
+            pl.BlockSpec((None, bq), lambda b, j, i, Hkv=Hkv: (b // Hkv, i)),
             pl.BlockSpec((bk,), lambda b, j, i: (j,)),
             pl.BlockSpec((None, bq), lambda b, j, i, Hkv=Hkv: (b // Hkv, i)),
             pl.BlockSpec((None, None, G * bq, hdk), lambda b, j, i: (b, i, 0, 0)),
@@ -447,6 +444,8 @@ def flash_attention_partial(q, k, v, q_pos, kv_pos, *, causal=True,
     if scale is None:
         scale = 1.0 / (q.shape[-1] ** 0.5)
     B, Tq = q.shape[0], q.shape[1]
+    if q_pos.ndim == 1:
+        q_pos = jnp.broadcast_to(q_pos[None, :], (B, Tq))
     if q_start is None:
         q_start = jnp.zeros((B, Tq), jnp.int32)
     elif q_start.ndim == 1:

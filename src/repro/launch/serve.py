@@ -1,31 +1,310 @@
-"""Batched serving driver: prefill + decode loop on a (test) mesh.
+"""Serving drivers: static lock-step decode and continuous batching.
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2-7b --reduced \
       --mesh 2x2 --prompt-len 128 --batch 4 --decode-steps 16
 
-Exercises the same prefill_step/serve_step the dry-run lowers, with real
-values: prefill builds the position-tagged, sequence-sharded cache; decode
-appends striped slots and samples greedily.
+Two engines over the same step functions:
+
+  * the **static** CLI path (``main``): one prefill, then lock-step
+    ``serve_step`` decode of a fixed batch — every request the same length,
+    a private maximum-length cache row each;
+  * ``ServeEngine``: a request-level scheduler over the paged KV pool
+    (``runtime/kvpool.py``) — prompts right-aligned into a fixed bucket,
+    per-request block tables, admission into freed slots mid-flight, and a
+    decode loop that never syncs the host (sampled tokens feed back
+    device-to-device; per-step handles are demuxed once at the end).
+    ``mode="static"`` runs the same engine with admission barriered on an
+    empty pool, which is the lock-step baseline the continuous scheduler is
+    benchmarked against (token streams are bitwise identical by
+    construction — the per-row compute does not depend on co-residents).
 """
 from __future__ import annotations
 
 import argparse
 import logging
 import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ShapeConfig, get_config
 from repro.launch.mesh import make_test_mesh
 from repro.launch.train import build_params
 from repro.models.model_zoo import build_model
-from repro.parallel.runner import (batch_struct, make_prefill_step,
-                                   make_serve_step, resolve_cell)
+from repro.parallel.runner import (batch_struct, make_pool_ingest,
+                                   make_pool_serve_step, make_pool_state,
+                                   make_prefill_step, make_serve_step,
+                                   resolve_cell)
+from repro.runtime import kvpool
 
 log = logging.getLogger("repro.serve")
+
+
+def shard_rows(arr: np.ndarray, dp: int, pp: int) -> np.ndarray:
+    """[batch, ...] -> [1, dp*pp, b_loc, ...]: the decode batch layout.
+
+    Data row i belongs to dp group i // pp; every stage row of a group
+    carries the group's batch shard (stages need the same tokens).  Exact:
+    batch must divide by dp.
+    """
+    batch = arr.shape[0]
+    if batch % dp != 0:
+        raise ValueError(
+            f"batch {batch} does not divide by dp {dp}: the per-shard rows "
+            "would truncate or duplicate requests")
+    b_loc = batch // dp
+    rows = np.stack([arr[(i // pp) * b_loc:(i // pp + 1) * b_loc]
+                     for i in range(dp * pp)])
+    return rows[None]
+
+
+def gather_decode_tokens(nxt: np.ndarray, dp: int, pp: int,
+                         batch: int) -> np.ndarray:
+    """[dp*pp, b_loc, 1] serve_step output -> [batch] tokens, shape-exact.
+
+    Inverse of ``shard_rows``: take each dp group's (replicated) stage rows
+    once, in group order.  Raises instead of silently dropping or
+    duplicating rows when the shapes disagree.
+    """
+    n_rows, b_loc = nxt.shape[0], nxt.shape[1]
+    if n_rows != dp * pp:
+        raise ValueError(f"expected {dp * pp} data rows, got {n_rows}")
+    if b_loc * dp != batch:
+        raise ValueError(
+            f"{dp} groups x {b_loc} rows/group = {dp * b_loc} requests, "
+            f"caller expects {batch}")
+    return np.concatenate([nxt[g * pp + (pp - 1), :, 0] for g in range(dp)])
+
+
+# ---------------------------------------------------------------------------
+# Continuous-batching engine
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class Request:
+    """One decode request: token prompt + a fixed decode length.
+
+    ``arrival`` is the earliest engine step the request may be admitted at
+    (0 = present from the start).  Completion is by fixed length — EOS-based
+    early exit would need a host read of the sampled token and is left as
+    future work (DESIGN.md §16).
+    """
+
+    rid: int
+    prompt: np.ndarray
+    max_new: int
+    arrival: int = 0
+
+
+@dataclass
+class RunStats:
+    """Host-side accounting of one ``ServeEngine.run``."""
+
+    steps: int = 0              # decode device steps launched
+    waves: int = 0              # admission waves (each costs one prefill)
+    wall_s: float = 0.0         # loop wall time, including the final sync
+    pool_bytes: int = 0         # measured per-rank pool device bytes
+    spans: Dict[int, Tuple[int, int]] = field(default_factory=dict)
+    peak_blocks: List[int] = field(default_factory=list)   # per data shard
+    total_blocks: List[int] = field(default_factory=list)  # per data shard
+
+
+class ServeEngine:
+    """Request-level continuous-batching scheduler over the paged KV pool.
+
+    Fixed geometry per engine: ``slots`` request slots per data shard, a
+    ``s_bucket``-token right-aligned prompt bucket, and ``max_new`` decode
+    budget.  Admission allocates a request's blocks wholesale and prefills
+    the wave's prompts in the batch rows of their target slots (identity
+    ingest); eviction returns the blocks.  The decode loop pushes host
+    state (positions, block tables, admission masks) down every step and
+    threads sampled tokens device-to-device — it never blocks on a device
+    value until the final demux.
+    """
+
+    def __init__(self, arch, mesh, *, s_bucket: int, slots: int,
+                 max_new: int, block_tokens: int = 8,
+                 n_blocks: Optional[int] = None, admit_min_free: int = 2,
+                 reduced: bool = False, params=None):
+        cfg = get_config(arch) if isinstance(arch, str) else arch
+        if reduced:
+            cfg = cfg.reduced()
+        self.mdef = build_model(cfg)
+        self.cfg = self.mdef.cfg
+        self.mesh = mesh
+        self.data_size = mesh.shape["data"]
+        self.model_size = mesh.shape["model"]
+        self.slots = slots
+        self.admit_min_free = admit_min_free
+        kg = slots * self.data_size
+
+        pre_shape = ShapeConfig("engine_prefill", s_bucket, kg, "prefill")
+        dec_shape = ShapeConfig("engine_decode", s_bucket, kg, "decode")
+        ovr = dict(pp=1, dp=self.data_size)
+        self.pre_cell = resolve_cell(
+            self.mdef, pre_shape, data_size=self.data_size,
+            model_size=self.model_size,
+            overrides=dict(n_chunks=max(1, s_bucket // 64),
+                           offload=False, remat="none", **ovr))
+        self.dec_cell = resolve_cell(
+            self.mdef, dec_shape, data_size=self.data_size,
+            model_size=self.model_size, overrides=dict(ovr))
+
+        dec_loc = -(-max_new // self.model_size)
+        l_loc = s_bucket // self.model_size + dec_loc
+        max_blocks = -(-l_loc // block_tokens)
+        self.geo = kvpool.PoolGeometry(
+            s_bucket=s_bucket, sp=self.model_size, max_new=max_new,
+            block_tokens=block_tokens,
+            n_blocks=slots * max_blocks if n_blocks is None else n_blocks,
+            n_slots=slots)
+        self.pos_map = kvpool.pos_map(self.geo, self.pre_cell.sched)
+
+        if params is None:
+            params, _, _ = build_params(self.pre_cell, mesh)
+        self.params = params
+        self._prefill = jax.jit(make_prefill_step(self.pre_cell, mesh)[0])
+        self._ingest = jax.jit(make_pool_ingest(self.pre_cell, self.geo,
+                                                mesh),
+                               donate_argnums=(1,))
+        self._step = jax.jit(make_pool_serve_step(self.dec_cell, self.geo,
+                                                  mesh, self.pos_map),
+                             donate_argnums=(1,))
+        _, self._pre_bspecs = batch_struct(self.pre_cell)
+        self._io = NamedSharding(mesh, P(None, "data"))
+
+    # ----- helpers ---------------------------------------------------------
+    def _put(self, arr: np.ndarray):
+        return jax.device_put(jnp.asarray(arr)[None], self._io)
+
+    def pool_device_bytes(self, pool) -> int:
+        """Measured pool bytes on one (data, model) rank."""
+        total = sum(int(a.nbytes)
+                    for a in jax.tree_util.tree_leaves(pool))
+        return total // self.data_size
+
+    def predicted_pool_bytes(self) -> int:
+        """Cost-model prediction of per-rank pool bytes (Type-0 channel)."""
+        spp = self.mdef.slots_per_stage(1)
+        itemsize = jnp.dtype(self.dec_cell.dtype).itemsize
+        return self.geo.pool_bytes(self.cfg, n_layers=spp,
+                                   itemsize=itemsize)
+
+    # ----- scheduler -------------------------------------------------------
+    def run(self, requests: Sequence[Request], mode: str = "continuous"
+            ) -> Tuple[Dict[int, np.ndarray], RunStats]:
+        """Decode every request; returns ({rid: tokens}, stats).
+
+        ``mode="continuous"``: admit into freed slots mid-flight whenever at
+        least ``admit_min_free`` slots are free (or the engine is idle).
+        ``mode="static"``: admit only when *all* slots are free — the
+        lock-step baseline.  Token streams are identical across modes.
+        """
+        assert mode in ("continuous", "static"), mode
+        geo, d_size, k_slots = self.geo, self.data_size, self.slots
+        for r in requests:
+            if not 1 <= len(r.prompt) <= geo.s_bucket:
+                raise ValueError(
+                    f"request {r.rid}: prompt length {len(r.prompt)} not in "
+                    f"[1, {geo.s_bucket}]")
+            if not 1 <= r.max_new <= geo.max_new:
+                raise ValueError(
+                    f"request {r.rid}: max_new {r.max_new} not in "
+                    f"[1, {geo.max_new}]")
+        queue = sorted(requests, key=lambda r: (r.arrival, r.rid))
+        pools = [kvpool.BlockPool(geo.n_blocks) for _ in range(d_size)]
+        active: Dict[Tuple[int, int], dict] = {}
+        qp = np.zeros((d_size, k_slots), np.int32)
+        btab = np.full((d_size, k_slots, geo.max_blocks), -1, np.int32)
+        pool, _ = make_pool_state(self.dec_cell, geo, self.mesh)
+        tokens = self._put(np.zeros((d_size, k_slots, 1), np.int32))
+        handles, traces = [], []
+        stats = RunStats()
+        stats.pool_bytes = self.pool_device_bytes(pool)
+        t0 = time.time()
+        t = 0
+        qi = 0
+        while qi < len(queue) or active:
+            if qi < len(queue) and not active \
+                    and queue[qi].arrival > t:
+                t = queue[qi].arrival  # idle gap: jump to the next arrival
+            free = [(d, k) for d in range(d_size) for k in range(k_slots)
+                    if (d, k) not in active]
+            n_avail = 0
+            while qi + n_avail < len(queue) \
+                    and queue[qi + n_avail].arrival <= t:
+                n_avail += 1
+            gate = (not active) if mode == "static" else (
+                not active or len(free) >= self.admit_min_free)
+            admit = np.zeros((d_size, k_slots), bool)
+            atok = np.zeros((d_size, k_slots, 1), np.int32)
+            if n_avail and free and gate:
+                prompt_rows = np.zeros(
+                    (d_size, k_slots, geo.s_bucket), np.int32)
+                for (d, k) in free[:n_avail]:
+                    r = queue[qi]
+                    qi += 1
+                    blocks = pools[d].alloc(geo.blocks_for(r.max_new))
+                    btab[d, k] = kvpool.block_table_row(geo, blocks)
+                    p = np.asarray(r.prompt, np.int32)
+                    prompt_rows[d, k, geo.s_bucket - len(p):] = p
+                    admit[d, k] = True
+                    atok[d, k, 0] = p[-1]
+                    qp[d, k] = geo.s_bucket
+                    active[(d, k)] = dict(rid=r.rid, left=r.max_new,
+                                          emitted=0, blocks=blocks)
+                    stats.spans[r.rid] = (t, -1)
+                pb = {"tokens": self._put(prompt_rows),
+                      "labels": self._put(prompt_rows)}
+                pb = {k_: jax.device_put(
+                    v, NamedSharding(self.mesh, self._pre_bspecs[k_]))
+                    for k_, v in pb.items() if k_ in self._pre_bspecs}
+                state_pre, _ = self._prefill(self.params, pb)
+                pool = self._ingest(state_pre, pool, self._put(btab),
+                                    self._put(admit))
+                stats.waves += 1
+            batch = {"tokens": tokens, "q_pos": self._put(qp),
+                     "btab": self._put(btab), "admit": self._put(admit),
+                     "admit_tok": self._put(atok)}
+            pool, nxt = self._step(self.params, pool, batch)
+            tokens = nxt[None]
+            handles.append(nxt)
+            traces.append([(d, k, st["rid"], st["emitted"])
+                           for (d, k), st in active.items()])
+            stats.steps += 1
+            for (d, k) in list(active):
+                st = active[(d, k)]
+                st["emitted"] += 1
+                st["left"] -= 1
+                qp[d, k] += 1
+                if st["left"] == 0:
+                    pools[d].free(st["blocks"])
+                    btab[d, k] = -1
+                    qp[d, k] = 0
+                    stats.spans[st["rid"]] = (stats.spans[st["rid"]][0],
+                                              t + 1)
+                    del active[(d, k)]
+            t += 1
+        out = {r.rid: np.zeros(r.max_new, np.int32) for r in requests}
+        for h, emits in zip(handles, traces):  # single end-of-run sync
+            arr = np.asarray(h)
+            for d, k, rid, i in emits:
+                out[rid][i] = arr[d, k, 0]
+        stats.wall_s = time.time() - t0
+        stats.peak_blocks = [p.peak_used for p in pools]
+        stats.total_blocks = [p.total_allocated for p in pools]
+        return out, stats
+
+
+# ---------------------------------------------------------------------------
+# Static CLI path
+# ---------------------------------------------------------------------------
 
 
 def main(argv=None):
@@ -36,6 +315,9 @@ def main(argv=None):
     ap.add_argument("--prompt-len", type=int, default=128)
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--decode-steps", type=int, default=8)
+    ap.add_argument("--continuous", action="store_true",
+                    help="decode through the paged-pool ServeEngine instead "
+                         "of the static lock-step path")
     args = ap.parse_args(argv)
     logging.basicConfig(level=logging.INFO, format="%(asctime)s %(message)s")
 
@@ -45,8 +327,30 @@ def main(argv=None):
     if args.reduced:
         cfg = cfg.reduced()
     mdef = build_model(cfg)
-
     S = args.prompt_len
+
+    rng = np.random.default_rng(0)
+    prompts = rng.integers(2, cfg.vocab_size,
+                           size=(args.batch, S)).astype(np.int32)
+
+    if args.continuous:
+        if args.batch % data_size != 0:
+            raise ValueError(f"batch {args.batch} does not divide by "
+                             f"data={data_size}")
+        eng = ServeEngine(cfg, mesh, s_bucket=S,
+                          slots=args.batch // data_size,
+                          max_new=args.decode_steps)
+        reqs = [Request(rid=i, prompt=prompts[i], max_new=args.decode_steps)
+                for i in range(args.batch)]
+        t0 = time.time()
+        toks, stats = eng.run(reqs, mode="continuous")
+        out = np.stack([toks[i] for i in range(args.batch)])
+        log.info("continuous: %d steps, %d waves in %.2fs",
+                 stats.steps, stats.waves, time.time() - t0)
+        log.info("decoded %s tokens/seq; sample row: %s", out.shape[1],
+                 out[0][:16])
+        return out
+
     pre_shape = ShapeConfig("cli_prefill", S, args.batch, "prefill")
     dec_shape = ShapeConfig("cli_decode", S, args.batch, "decode")
     pre_cell = resolve_cell(mdef, pre_shape, data_size=data_size,
@@ -57,29 +361,36 @@ def main(argv=None):
     dec_cell = resolve_cell(mdef, dec_shape, data_size=data_size,
                             model_size=model_size,
                             overrides=dict(pp=1, dp=data_size))
+    # Prefill built the cache the decode cell reads: the two cells must
+    # agree on its geometry (same striped layout, same local length), or
+    # decode reads garbage positions with no shape error anywhere.
+    assert pre_cell.cache_loc == dec_cell.cache_loc, (
+        f"prefill cache_loc {pre_cell.cache_loc} != decode cache_loc "
+        f"{dec_cell.cache_loc}")
+    assert pre_cell.plan.sp == dec_cell.plan.sp
+    if args.batch % dec_cell.plan.dp != 0:
+        raise ValueError(
+            f"batch {args.batch} does not divide by dp {dec_cell.plan.dp}; "
+            "per-shard rows would truncate or duplicate requests")
 
     params, _, _ = build_params(pre_cell, mesh)
     prefill, _, _ = make_prefill_step(pre_cell, mesh)
-    serve, _, _ = make_serve_step(dec_cell, mesh)
+    # constructing with decode_steps validates the decode budget up front
+    serve, _, _ = make_serve_step(dec_cell, mesh,
+                                  decode_steps=args.decode_steps)
     prefill = jax.jit(prefill)
     serve = jax.jit(serve, donate_argnums=(1,))
 
-    rng = np.random.default_rng(0)
-    prompts = rng.integers(2, cfg.vocab_size,
-                           size=(args.batch, S)).astype(np.int32)
     bstruct, bspecs = batch_struct(pre_cell)
-    b_loc = pre_cell.b_loc
-    tok = np.stack([prompts[(i // pre_cell.plan.pp) * b_loc:
-                            (i // pre_cell.plan.pp) * b_loc + b_loc]
-                    for i in range(data_size)])[None]
+    tok = shard_rows(prompts, pre_cell.plan.dp, pre_cell.plan.pp)
     batch = {"tokens": jnp.asarray(tok), "labels": jnp.asarray(tok)}
     if cfg.cross_attn is not None:
         n_ctx = (cfg.n_frames if cfg.encoder_layers
                  else cfg.cross_attn.n_context_tokens)
         n_pad = -(-n_ctx // model_size) * model_size
         batch["context"] = jnp.asarray(
-            rng.standard_normal((1, data_size, b_loc, n_pad, cfg.d_model))
-            * 0.02, jnp.bfloat16)
+            rng.standard_normal((1, data_size, pre_cell.b_loc, n_pad,
+                                 cfg.d_model)) * 0.02, jnp.bfloat16)
     batch = {k: jax.device_put(v, NamedSharding(mesh, bspecs[k]))
              for k, v in batch.items() if k in bspecs}
 
@@ -88,25 +399,20 @@ def main(argv=None):
     log.info("prefill %d tokens x %d seqs in %.2fs", S, args.batch,
              time.time() - t0)
 
-    # NOTE: prefill and decode cells share cache geometry because
-    # resolve_cell sizes the cache from the shape's seq_len + decode budget.
-    toks = []
-    cur = jnp.asarray(prompts[:, -1:])  # last prompt token (already in cache)
+    # Decode loop: tokens thread device-to-device (serve_step replicates the
+    # last stage's samples to every stage row), so the host neither syncs
+    # nor re-shards mid-loop; the collected handles demux once at the end.
+    handles = []
+    cur = jnp.asarray(shard_rows(prompts[:, -1:], dec_cell.plan.dp,
+                                 dec_cell.plan.pp))
     for step in range(args.decode_steps):
-        pos = jnp.int32(S + step)
-        dbatch = {"tokens": jnp.asarray(
-            np.stack([np.asarray(cur)[(i // dec_cell.plan.pp) * b_loc:
-                                      (i // dec_cell.plan.pp) * b_loc + b_loc]
-                      for i in range(data_size)])[None]),
-            "pos": pos}
+        dbatch = {"tokens": cur, "pos": jnp.int32(S + step)}
         state, nxt = serve(params, state, dbatch)
-        # nxt: [data, B_loc, 1]; row i holds dp-group (i // pp)'s shard
-        arr = np.asarray(nxt)
-        pp = dec_cell.plan.pp
-        rows = [arr[g * pp + (pp - 1), :, 0] for g in range(dec_cell.plan.dp)]
-        cur = jnp.asarray(np.concatenate(rows)[:args.batch, None])
-        toks.append(np.asarray(cur)[:, 0])
-    out = np.stack(toks, axis=1)
+        cur = nxt[None]
+        handles.append(nxt)
+    out = np.stack([gather_decode_tokens(np.asarray(h), dec_cell.plan.dp,
+                                         dec_cell.plan.pp, args.batch)
+                    for h in handles], axis=1)
     log.info("decoded %s tokens/seq; sample row: %s", out.shape[1],
              out[0][:16])
     return out

@@ -24,7 +24,7 @@ code path as serve.
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Optional
+from typing import Any, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -234,6 +234,94 @@ def gqa_decode_attention(x, p, cfg, ctx: Ctx, cache: KVCache, step_pos,
     out = (o / jnp.maximum(l, 1e-30)[..., None]).astype(x.dtype)
     y = out.reshape(B, 1, H * hd) @ p["wo"]
     return y, cache
+
+
+class PooledKV(NamedTuple):
+    """Paged KV pool (one layer, one rank): physical block storage shared by
+    every request slot through a block table (runtime/kvpool.py).  Unlike
+    KVCache there is no batch dim and no position array — logical slot j has
+    the static per-rank position ``pos_map[j]`` for every request."""
+
+    k: jax.Array        # [P_loc, Hkv, hd]
+    v: jax.Array        # [P_loc, Hkv, hd]
+
+
+class PagedMeta(NamedTuple):
+    """Per-step paged-decode metadata (ChunkMeta.paged).
+
+    q_pos is per-request: slot b feeds its token at global position q_pos[b]
+    (0 marks an inactive slot — its write is dropped and its output is
+    discarded by the scheduler).  btab maps logical blocks to physical pool
+    blocks (-1 = unallocated; such slots are causally masked because their
+    pos_map position exceeds the request's horizon).  base / s_bucket /
+    block_tokens are static geometry (PoolGeometry).
+    """
+
+    q_pos: Any          # [B] int32 per-request global feed position
+    btab: Any           # [B, max_blocks] int32 block table
+    pos_map: Any        # [L_loc] int32 static positions of logical slots
+    base: int           # prefill logical slots per rank (static)
+    s_bucket: int       # padded prompt bucket length (static)
+    block_tokens: int   # logical slots per block (static)
+
+
+def gqa_paged_decode_attention(x, p, cfg, ctx: Ctx, pool: PooledKV,
+                               pg: PagedMeta):
+    """Single-token decode against the paged pool. x: [B, 1, d].
+
+    Every request slot carries its *own* position (pg.q_pos), so rows at
+    different decode depths batch together.  The write is striped like the
+    static path — decode token d lives on rank (d % sp) at logical slot
+    (base + d // sp) — routed through the block table to a physical slot;
+    non-owning ranks and inactive slots write to an out-of-bounds sentinel
+    that scatter-drops (never -1: jnp wraps negative indices).
+    """
+    B = x.shape[0]
+    H, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(B, 1, H, hd)
+    k = k.reshape(B, 1, Hkv, hd)
+    v = v.reshape(B, 1, Hkv, hd)
+    qpos = pg.q_pos[:, None]                     # [B, 1] per-row positions
+    if cfg.rope:
+        q = L.apply_rope(q, qpos, cfg.rope_theta, cfg.rope_fraction)
+        k = L.apply_rope(k, qpos, cfg.rope_theta, cfg.rope_fraction)
+
+    sp, rank = ctx.sp, ctx.model_index()
+    bt = pg.block_tokens
+    p_loc = pool.k.shape[0]
+    l_loc = pg.pos_map.shape[0]
+    d = pg.q_pos - pg.s_bucket                   # [B] decode index (<0: none)
+    mine = (d >= 0) & (d % sp == rank)
+    j_w = jnp.clip(pg.base + d // sp, 0, l_loc - 1)
+    blk = jnp.take_along_axis(pg.btab, (j_w // bt)[:, None], axis=1)[:, 0]
+    phys_w = jnp.where(mine & (blk >= 0), blk * bt + j_w % bt, p_loc)
+    pool = PooledKV(
+        k=pool.k.at[phys_w].set(k[:, 0].astype(pool.k.dtype), mode="drop"),
+        v=pool.v.at[phys_w].set(v[:, 0].astype(pool.v.dtype), mode="drop"))
+
+    # per-request gather in logical-slot order: identical kv ordering to the
+    # static cache, so a solo request decodes bit-identically to the static
+    # lock-step loop regardless of which physical blocks it landed in
+    jlog = jnp.arange(l_loc)
+    blk_g = pg.btab[:, jlog // bt]               # [B, L_loc]
+    phys_g = jnp.clip(blk_g, 0) * bt + jlog % bt
+    k_g = pool.k[phys_g]                         # [B, L_loc, Hkv, hd]
+    v_g = pool.v[phys_g]
+    o, m, l = kops.attention_partial(q, k_g, v_g, qpos, pg.pos_map,
+                                     causal=True)
+    m = jax.lax.stop_gradient(m)
+    m_g = jax.lax.stop_gradient(ctx.pmax_model(m))
+    alpha = jnp.exp(m - m_g)
+    o = ctx.psum_model(o * alpha[..., None])
+    l = ctx.psum_model(l * alpha)
+    out = (o / jnp.maximum(l, 1e-30)[..., None]).astype(x.dtype)
+    y = out.reshape(B, 1, H * hd) @ p["wo"]
+    return y, pool
 
 
 # ---------------------------------------------------------------------------

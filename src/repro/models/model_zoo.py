@@ -491,7 +491,9 @@ class ModelDef:
             x = L.embed_tokens(ids, table, ctx, out_dtype=table.dtype)
         if self.cfg.pos_emb == "learned":
             pos = jnp.clip(q_pos_local, 0, self.cfg.max_position - 1)
-            x = x + jnp.take(g["pos"]["table"], pos, axis=0)[None]
+            emb = jnp.take(g["pos"]["table"], pos, axis=0)
+            # positions are [T] (shared) or [B, T] (per-request paged decode)
+            x = x + (emb if pos.ndim == 2 else emb[None])
         return x
 
     def head_loss(self, g, x_loc, labels, mask, ctx: Ctx):

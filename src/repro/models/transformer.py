@@ -40,6 +40,10 @@ class ChunkMeta(NamedTuple):
     # packed variable-length batches: [B, T_loc] int32 document-start window
     # per query token (attention masks kv_pos < q_start); None = unpacked
     q_start: Any = None
+    # paged continuous-batching decode: an attention.PagedMeta routing the
+    # slot's KV through the block-table pool (runtime/kvpool.py); None keeps
+    # the static striped-cache decode path
+    paged: Any = None
 
 
 ZERO = jnp.float32(0.0)
@@ -58,7 +62,10 @@ def _res(x, delta, gate):
 
 def dense_slot(cfg, p, s, x, ctx: Ctx, meta: ChunkMeta, extras=None):
     h = L.apply_norm(x, p["ln1"], cfg.norm)
-    if meta.decode:
+    if meta.decode and meta.paged is not None:
+        a, kv = A.gqa_paged_decode_attention(h, p["attn"], cfg, ctx, s["kv"],
+                                             meta.paged)
+    elif meta.decode:
         a, kv = A.gqa_decode_attention(h, p["attn"], cfg, ctx, s["kv"],
                                        meta.q_pos[0], meta.my_slot)
     else:

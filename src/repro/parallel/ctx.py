@@ -137,6 +137,17 @@ class Ctx:
                 x = jax.lax.psum(x, ax)
         return x
 
+    def psum_stages(self, x):
+        """Sum within each dp group *across its pipeline stages* (the
+        transpose of ``_dp_groups``).  Used to replicate the last stage's
+        sampled decode tokens to every stage row of its group, so the serve
+        loop can feed tokens back device-to-device without a host gather."""
+        if self.data_axis is None or self.pp == 1:
+            return x
+        groups = [[g * self.pp + s for s in range(self.pp)]
+                  for g in range(self.dp)]
+        return jax.lax.psum(x, self.data_axis, axis_index_groups=groups)
+
     def ppermute_stage(self, x, perm: Sequence[Tuple[int, int]]):
         """Permute along the data axis (pipeline stage hand-off)."""
         if self.data_axis is None or self.dp * self.pp == 1:

@@ -33,6 +33,7 @@ from repro.core import offload as ofl
 from repro.core import partition as part
 from repro.core import schedule as sched_mod
 from repro.core import simulate as sim_mod
+from repro.models import attention as A
 from repro.models.model_zoo import ModelDef, build_model
 from repro.models.transformer import ChunkMeta
 from repro.parallel import specs as SP
@@ -494,6 +495,16 @@ def run_pipeline(cell: Cell, ctx: Ctx, stage_p, g, tokens, labels, context,
     # positions, same weights) and the loss mask restricts each sub-event to
     # its own sub-chunk region, so every token is counted exactly once and
     # the loss equals the plain schedule's bit-for-bit function of params.
+    #
+    # Warmup and drain ticks are NOT idempotent: they clamp e_my to a real
+    # event but feed it garbage (stage 0 embeds zeros once t >= E; later
+    # stages consume a stale drain carry), so their cache rewrite clobbers
+    # the event's kv with junk.  A warmup write is repaired by the stage's
+    # first valid tick, but a drain write on any stage except the last is
+    # final — the returned prefill state would hand the decode loop a
+    # zeroed cache.  The state update below is therefore masked to valid
+    # ticks; training is bit-unaffected (state is re-initialised per call
+    # and each stage's garbage writes land after its last valid read).
     clen = S // N
     lloc = clen // sp
     events = pipeline_feed_events(plan, N)
@@ -525,6 +536,8 @@ def run_pipeline(cell: Cell, ctx: Ctx, stage_p, g, tokens, labels, context,
             # harmlessly (their output is masked out below)
             ds_loc = jax.lax.dynamic_slice_in_dim(
                 doc_start, off_my + rank * lloc, lloc, axis=1)
+        valid = (t - stage >= 0) & (t - stage < E)
+        prev_state = state
         # tick-aligned offload ratio: the SPMD program is uniform across
         # stages, so every stage tags with the fed event's deployed alpha
         if ahead:
@@ -545,10 +558,12 @@ def run_pipeline(cell: Cell, ctx: Ctx, stage_p, g, tokens, labels, context,
                 offload=plan.offload, remat=plan.remat,
                 offload_mode=plan.offload_mode,
                 offload_dtype=plan.offload_dtype if with_loss else "none")
+        # drop warmup/drain rewrites (see the block comment above)
+        state = jax.tree_util.tree_map(
+            lambda old, new: jnp.where(valid, new, old), prev_state, state)
         if ledger is not None:
             from repro.runtime import memledger as _ml
             x_out = _ml.tick_probe(x_out, ledger, t)
-        valid = (t - stage >= 0) & (t - stage < E)
         # sub-events of one chunk run identical compute; scale aux (MoE
         # balance) by 1/n_sub so each chunk contributes once in total
         aux_acc = aux_acc + jnp.where(valid, aux * inv_ns[e_my], 0.0)
@@ -745,7 +760,28 @@ def make_prefill_step(cell: Cell, mesh):
     return prefill_step, sstruct, sspecs
 
 
-def make_serve_step(cell: Cell, mesh):
+def max_decode_steps(cell: Cell) -> int:
+    """Longest decode run the striped cache can absorb: token S + i lands at
+    local slot base + i // sp, and the buffer holds DECODE_BUDGET slots past
+    base — so step DECODE_BUDGET * sp is the first to fall off the end."""
+    return DECODE_BUDGET * cell.plan.sp
+
+
+def make_serve_step(cell: Cell, mesh, *, decode_steps=None):
+    """Build the static lock-step decode step.
+
+    decode_steps: when given, the number of steps the caller intends to run;
+    rejected at construction if it exceeds the cache's decode budget —
+    beyond it ``my_slot`` runs past ``cache_loc`` and the clamped
+    dynamic-update would silently overwrite the last slot, corrupting every
+    later logit with no error.
+    """
+    if decode_steps is not None and decode_steps > max_decode_steps(cell):
+        raise ValueError(
+            f"decode_steps={decode_steps} exceeds the cache's decode budget "
+            f"of {max_decode_steps(cell)} steps (DECODE_BUDGET={DECODE_BUDGET}"
+            f" slots x sp={cell.plan.sp}); the striped write would silently "
+            "wrap onto the last cache slot")
     pspecs = _in_specs_for_params(cell)
     bstruct, bspecs = batch_struct(cell)
     _, sstruct, sspecs_g = _serve_state(cell)
@@ -836,6 +872,11 @@ def make_serve_step(cell: Cell, mesh):
             (state, _, nxt), _ = jax.lax.scan(
                 tick, (state, carry0, nxt0),
                 jnp.arange(n_ticks, dtype=jnp.int32))
+            # only the last stage sampled real tokens; replicate them to
+            # every stage row of the dp group so callers can thread nxt
+            # straight back in as the next step's tokens (no host gather)
+            nxt = ctx.psum_stages(
+                jnp.where(stage == plan.pp - 1, nxt, 0))
         state = jax.tree_util.tree_map(lambda a: a[None], state)
         return state, nxt[None]
 
@@ -877,3 +918,166 @@ def _serve_state(cell: Cell):
     specs = jax.tree_util.tree_map(
         lambda s: P(*(("data",) + (None,) * s.ndim)), local)
     return local, struct, specs
+
+
+# ---------------------------------------------------------------------------
+# Paged-pool continuous-batching decode (DESIGN.md §16)
+# ---------------------------------------------------------------------------
+
+
+def _assert_pool_cell(cell: Cell, geo):
+    assert cell.plan.pp == 1, "paged decode pool requires pp == 1"
+    assert cell.pods == 1, "paged decode pool is single-pod"
+    cfg = cell.cfg
+    assert (cfg.family == "dense" and cfg.cross_attn is None
+            and cfg.mla is None), (
+        f"paged decode pool supports dense GQA families only, got "
+        f"family={cfg.family!r}")
+    assert cell.plan.sp == geo.sp, (cell.plan.sp, geo.sp)
+    assert cell.b_loc == geo.n_slots, (
+        f"cell batch/shard {cell.b_loc} != pool slots {geo.n_slots}")
+
+
+def _pool_specs():
+    spec = P("data", None, None, None, None)
+    return {"kv": A.PooledKV(k=spec, v=spec)}
+
+
+def make_pool_state(cell: Cell, geo, mesh):
+    """Zero-initialized paged KV pool for ``cell`` (global arrays + specs).
+
+    One [P_loc, Hkv, hd] block buffer per layer-slot per (data, model) rank;
+    the spec claims model-axis replication like ``_serve_state`` does (the
+    shard_map wrapper disables replication checks), so each model rank keeps
+    its own sequence shard of the pool.
+    """
+    _assert_pool_cell(cell, geo)
+    spp = cell.mdef.slots_per_stage(cell.plan.pp)
+    cfg = cell.cfg
+    shape = (cell.data_size, spp, geo.p_loc, cfg.n_kv_heads, cfg.hd)
+    spec = P("data", None, None, None, None)
+
+    def arr():
+        return jax.device_put(jnp.zeros(shape, cell.dtype),
+                              jax.sharding.NamedSharding(mesh, spec))
+
+    return {"kv": A.PooledKV(k=arr(), v=arr())}, _pool_specs()
+
+
+def make_pool_ingest(pre_cell: Cell, geo, mesh):
+    """Copy an admission wave's prefilled caches into the pool.
+
+    Identity slot mapping: the engine prefills each admitted request in the
+    batch row of its target pool slot, so prefill cache row b of a data
+    shard feeds pool slot b of the same shard, and the first ``base``
+    logical slots of the prefill cache are exactly the right-aligned prompt
+    bucket.  Rows outside the admit mask scatter to an out-of-bounds
+    sentinel and drop.
+    """
+    _assert_pool_cell(pre_cell, geo)
+    assert pre_cell.shape.seq_len == geo.s_bucket, (
+        pre_cell.shape.seq_len, geo.s_bucket)
+    assert pre_cell.cache_loc >= geo.base
+    _, _, sspecs = _serve_state(pre_cell)
+    pool_specs = _pool_specs()
+    bt, p_loc = geo.block_tokens, geo.p_loc
+    io = P(None, "data")
+
+    def smap_body(state_pre, pool, btab, admit):
+        state_pre = _squeeze_lead(state_pre, 1)
+        pool = _squeeze_lead(pool, 1)
+        btab = _squeeze_lead(btab, 2)                    # [K, max_blocks]
+        admit = _squeeze_lead(admit, 2)                  # [K] bool
+        jlog = jnp.arange(geo.base)
+        blk = btab[:, jlog // bt]                        # [K, base]
+        phys = jnp.where(admit[:, None] & (blk >= 0),
+                         blk * bt + jlog % bt, p_loc)
+
+        def copy(pool_a, cache_a):
+            # pool_a: [spp, P_loc, Hkv, hd]; cache_a: [spp, K, C_loc, ...]
+            vals = cache_a[:, :, :geo.base]
+
+            def one(pa, va):
+                return pa.at[phys].set(va.astype(pa.dtype), mode="drop")
+
+            return jax.vmap(one)(pool_a, vals)
+
+        kv, pkv = state_pre["kv"], pool["kv"]
+        new = {"kv": A.PooledKV(k=copy(pkv.k, kv.k), v=copy(pkv.v, kv.v))}
+        return jax.tree_util.tree_map(lambda a: a[None], new)
+
+    smapped = shard_map(smap_body, mesh,
+                        in_specs=(sspecs, pool_specs, io, io),
+                        out_specs=pool_specs)
+
+    def ingest(state_pre, pool, btab, admit):
+        return smapped(state_pre, pool, btab, admit)
+
+    return ingest
+
+
+def make_pool_serve_step(cell: Cell, geo, mesh, pos_map):
+    """One continuous-batching decode step against the paged pool.
+
+    Unlike ``make_serve_step`` there is no global position scalar: every
+    request slot carries its own feed position (``q_pos``; 0 = inactive
+    slot), its own block-table row, and its own sampled-token carry, so
+    requests at different decode depths step together and the host never
+    syncs mid-loop.  Admission folds in on device: rows under ``admit``
+    take ``admit_tok`` (the request's last prompt token) instead of the
+    carried sample.
+
+    batch keys (lead dims (1, data), spec P(None, "data")):
+      tokens    [1, D, K, 1]  carried sampled tokens (device-resident)
+      q_pos     [1, D, K]     per-slot global feed position, 0 = inactive
+      btab      [1, D, K, max_blocks] block table (host-pushed, -1 = unset)
+      admit     [1, D, K]     bool: overwrite the carry with admit_tok
+      admit_tok [1, D, K, 1]  first decode token of newly admitted rows
+    Returns (pool', nxt [D, K, 1]).
+    """
+    _assert_pool_cell(cell, geo)
+    import numpy as _np
+    pos_map = _np.asarray(pos_map)
+    assert pos_map.shape == (geo.sp, geo.l_loc), pos_map.shape
+    pspecs = _in_specs_for_params(cell)
+    pool_specs = _pool_specs()
+    plan = cell.plan
+    io = P(None, "data")
+    bspecs = {"tokens": io, "q_pos": io, "btab": io, "admit": io,
+              "admit_tok": io}
+
+    def smap_body(stage_p, g, pool, batch):
+        ctx = cell.ctx()
+        stage_p = _squeeze_lead(stage_p, 1)
+        pool = _squeeze_lead(pool, 1)
+        tokens = _squeeze_lead(batch["tokens"], 2)       # [K, 1]
+        qpos = _squeeze_lead(batch["q_pos"], 2)          # [K]
+        btab = _squeeze_lead(batch["btab"], 2)           # [K, max_blocks]
+        admit = _squeeze_lead(batch["admit"], 2)         # [K] bool
+        atok = _squeeze_lead(batch["admit_tok"], 2)      # [K, 1]
+        tokens = jnp.where(admit[:, None], atok, tokens)
+        rank = ctx.model_index()
+        paged = A.PagedMeta(q_pos=qpos, btab=btab,
+                            pos_map=jnp.asarray(pos_map)[rank],
+                            base=geo.base, s_bucket=geo.s_bucket,
+                            block_tokens=geo.block_tokens)
+        meta = ChunkMeta(q_pos=qpos, cache_off=0, kv_view=geo.l_loc,
+                         tag=ofl.null_tag, decode=True, paged=paged)
+        x = cell.mdef.embed(g, tokens, qpos[:, None], ctx, decode=True)
+        x, pool, _ = cell.mdef.stage_apply(
+            stage_p, pool, x, ctx, meta, g, offload=plan.offload,
+            remat=plan.remat, offload_mode=plan.offload_mode)
+        logits = cell.mdef.head_logits(g, x, ctx)
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        pool = jax.tree_util.tree_map(lambda a: a[None], pool)
+        return pool, nxt[None]
+
+    smapped = shard_map(
+        smap_body, mesh,
+        in_specs=(pspecs["stages"], pspecs["globals"], pool_specs, bspecs),
+        out_specs=(pool_specs, P("data", None, None)))
+
+    def pool_step(params, pool, batch):
+        return smapped(params["stages"], params["globals"], pool, batch)
+
+    return pool_step

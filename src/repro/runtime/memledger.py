@@ -41,6 +41,15 @@ Measurement channels, all taken from the *real* program:
    ``h2d_exposed_s``/``prefetch_ahead`` summary rows; the memgate's
    prefetch ablation gates the strict ahead-vs-sync reduction.
 
+0. **Pool channel** (Type-0, DESIGN.md §16) — serving has no activation
+   recurrence; its device-memory story is the paged KV pool
+   (``runtime/kvpool.py``).  ``PoolChannel`` records the measured per-rank
+   bytes of the real pool arrays against the cost model's closed form
+   (``costmodel.kv_pool_bytes``), plus the host allocator's peak / lifetime
+   block counts as the recycling evidence.  CI's serve half of the
+   memory-gate holds the measured/predicted ratio to the same 1.1x honesty
+   band the train channels get.
+
 5. **Compressed channel** (DESIGN.md §14) — when the plan sets
    ``offload_dtype``, the traced ``act_off@…`` names carry the 1-byte
    codec payload and ``act_scale@…`` names the device-resident per-row
@@ -330,6 +339,30 @@ class MomentChannel:
         return self.max_pair_bytes if self.offloaded else self.total_bytes
 
 
+@dataclass
+class PoolChannel:
+    """Measured paged-KV pool residency for one serve engine (Type-0).
+
+    ``measured_bytes`` is the per-rank device footprint of the real pool
+    arrays; ``predicted_bytes`` the cost model's closed form
+    (``costmodel.kv_pool_bytes``).  ``peak_blocks``/``total_blocks`` come
+    from the host allocator over a served trace: lifetime allocations
+    exceeding the physical block count while the peak stays within it is
+    the evidence that freed blocks are actually recycled."""
+
+    n_blocks: int
+    block_tokens: int
+    n_layers: int
+    measured_bytes: int
+    predicted_bytes: int
+    peak_blocks: int = 0
+    total_blocks: int = 0
+
+    @property
+    def ratio(self) -> float:
+        return self.measured_bytes / max(self.predicted_bytes, 1)
+
+
 # ---------------------------------------------------------------------------
 # The ledger
 # ---------------------------------------------------------------------------
@@ -367,6 +400,7 @@ class MemLedger:
     exposed_transfer_s: Optional[float] = None  # offload-on minus offload-off
     step_time_s: Optional[float] = None
     moments: Optional[MomentChannel] = None     # opt-state channel (§11)
+    pool: Optional[PoolChannel] = None          # Type-0 KV pool (§16)
     opt_time_s: Optional[float] = None          # measured update wall time
     prefetch: str = "ahead"                     # plan's reload placement
     h2d_exposed_s: Optional[float] = None       # Σ per-tick h2d_stall_s
@@ -576,6 +610,15 @@ class MemLedger:
                 w.writerow(["combined_peak_bytes", self.combined_peak_bytes])
                 if self.opt_time_s is not None:
                     w.writerow(["opt_time_s", f"{self.opt_time_s:.6f}"])
+            if self.pool is not None:
+                w.writerow(["kv_pool_bytes", self.pool.measured_bytes])
+                w.writerow(["kv_pool_predicted_bytes",
+                            self.pool.predicted_bytes])
+                w.writerow(["kv_pool_blocks", self.pool.n_blocks])
+                w.writerow(["kv_pool_block_tokens", self.pool.block_tokens])
+                w.writerow(["kv_pool_layers", self.pool.n_layers])
+                w.writerow(["kv_pool_peak_blocks", self.pool.peak_blocks])
+                w.writerow(["kv_pool_total_blocks", self.pool.total_blocks])
 
 
 def read_csv(path: str) -> Dict[str, object]:
