@@ -1,0 +1,17 @@
+"""Trace-time static analysis of the executed SPPO programs (DESIGN.md §17).
+
+``dataflow``   — the shared jaxpr walker (scoped equation iteration with scan
+                 trip multipliers, named-value byte accounting, device_put
+                 memory-kind counting, def-use lookups).  The memory ledger's
+                 traversals (runtime/memledger.py) delegate here.
+``report``     — machine-readable findings (``Finding`` / ``AuditReport``)
+                 plus the JSON serialization the audit-gate CI job uploads.
+``audit``      — the rule engine: traces a plan cell's train / prefill /
+                 optimizer-update steps over ShapeDtypeStructs (nothing is
+                 compiled or executed) and proves the offload/pipeline
+                 dataflow contracts R1–R5 on the jaxpr.
+
+Import ``repro.analysis.audit`` explicitly — it pulls in the runner and the
+ledger, and keeping it out of the package root lets those modules import
+``repro.analysis.dataflow`` without a cycle.
+"""

@@ -1,0 +1,106 @@
+"""Machine-readable audit findings (DESIGN.md §17).
+
+A ``Finding`` is one provable contract violation located in one traced
+program; an ``AuditReport`` is the outcome of auditing one plan cell (its
+findings plus the counters the rules derived, kept so a clean report is
+still reviewable evidence rather than a bare "ok").  The audit-gate CI job
+serializes reports with ``reports_to_json`` and uploads the file as an
+artifact on every run, pass or fail.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+
+@dataclass(frozen=True)
+class Finding:
+    """One contract violation.
+
+    id       — stable rule-scoped identifier (``R3-overlap-hazard``); tests
+               and CI assert on this, never on the message text.
+    rule     — the rule family (``R1`` … ``R5``).
+    message  — human-readable explanation with the counted evidence inline.
+    trace    — which traced program it was found in (``train-grad``,
+               ``prefill``, ``opt-update``, ``opt-init``).
+    subject  — the named value or site at fault (``act_off@t3``), when one
+               exists.
+    scope    — the jaxpr scope path of the offending equation
+               (``shard_map/scan/remat2``), when locatable.
+    """
+
+    id: str
+    rule: str
+    message: str
+    trace: str = ""
+    subject: str = ""
+    scope: str = ""
+
+    def __str__(self) -> str:
+        loc = " ".join(x for x in (self.trace, self.subject, self.scope) if x)
+        return f"[{self.id}] {self.message}" + (f"  ({loc})" if loc else "")
+
+
+@dataclass
+class AuditReport:
+    """Audit outcome for one cell: findings plus the counted evidence."""
+
+    cell: str
+    pp: int = 1
+    prefetch: str = ""
+    findings: List[Finding] = field(default_factory=list)
+    # rule-derived counters (d2h/h2d/pair counts, moment leaves, ...) kept
+    # for the artifact so clean runs still document what was proven
+    counters: Dict[str, int] = field(default_factory=dict)
+    traces: List[str] = field(default_factory=list)
+    error: Optional[str] = None
+
+    @property
+    def clean(self) -> bool:
+        return not self.findings and self.error is None
+
+    def add(self, finding: Finding) -> None:
+        self.findings.append(finding)
+
+    def finding_ids(self) -> List[str]:
+        return [f.id for f in self.findings]
+
+    def to_dict(self) -> dict:
+        return {
+            "cell": self.cell,
+            "pp": self.pp,
+            "prefetch": self.prefetch,
+            "clean": self.clean,
+            "findings": [dataclasses.asdict(f) for f in self.findings],
+            "counters": dict(self.counters),
+            "traces": list(self.traces),
+            "error": self.error,
+        }
+
+
+def reports_to_json(reports: List[AuditReport]) -> str:
+    payload = {
+        "schema": "repro-audit-report/1",
+        "clean": all(r.clean for r in reports),
+        "reports": [r.to_dict() for r in reports],
+    }
+    return json.dumps(payload, indent=2, sort_keys=False) + "\n"
+
+
+def format_report(report: AuditReport) -> str:
+    """One terminal block per cell, findings first."""
+    head = f"audit {report.cell} (pp={report.pp}"
+    if report.prefetch:
+        head += f", prefetch={report.prefetch}"
+    head += ")"
+    lines = [head]
+    if report.error is not None:
+        lines.append(f"  ERROR: {report.error}")
+    for f in report.findings:
+        lines.append(f"  FAIL {f}")
+    if report.clean:
+        proven = ", ".join(f"{k}={v}" for k, v in sorted(report.counters.items()))
+        lines.append("  ok" + (f" — {proven}" if proven else ""))
+    return "\n".join(lines)

@@ -135,9 +135,11 @@ class Checkpointer:
                                     or e["dtype"]))
             assert list(a.shape) == list(ref.shape), (p, a.shape, ref.shape)
             if sh is not None:
+                # transfer-lint: ok (checkpoint restore, host->device staging)
                 out.append(jax.device_put(a, sh))
             else:
                 # cast jax-side: numpy lacks cast kernels for ml_dtypes pairs
+                # transfer-lint: ok (checkpoint restore, host->device staging)
                 out.append(jax.device_put(a).astype(ref.dtype))
         extra = {}
         ds = os.path.join(d, "data_state.json")

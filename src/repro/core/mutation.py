@@ -1,0 +1,72 @@
+"""Seeded-mutation registry for the contract auditor (DESIGN.md §17).
+
+The auditor's rules are only trustworthy if they demonstrably *bite*, so
+``tests/mutants/`` re-introduces each historical bug class on demand and
+asserts the expected finding id fires.  Mutations are plain process-local
+flags checked at the (few) trace-construction sites they perturb; nothing
+here runs in production paths — when no mutation is enabled every hook is
+a single falsy set-membership test on an empty set.
+
+Known mutations (each maps to one documented finding id):
+
+  drain-tick-write    — skip the PR 9 tick-validity mask on pipeline state
+                        (runner tick loop)            → R4-unmasked-state
+  double-d2h          — offload each captured activation twice
+                        (runner capture)              → R1-d2h-count
+  unnamed-scale       — drop the checkpoint name from the quant scale
+                        (runner capture)              → R5-codec-pairing
+  scale-offloaded     — push the fp32 scale to host memory
+                        (runner capture)              → R2-scale-placement
+  fp8-named-residual  — skip the PR 7 int8 bitcast so a float8 payload is
+                        named inside remat (offload.host_round_trip)
+                                                      → R5-inexact-residual
+
+The sixth corpus member, the sync-reload overlap hazard
+(→ R3-overlap-hazard), needs no code mutation: it is the real
+``prefetch="sync"`` plan, seeded by a plan override alone.
+"""
+from __future__ import annotations
+
+from contextlib import contextmanager
+
+KNOWN = frozenset({
+    "drain-tick-write",
+    "double-d2h",
+    "unnamed-scale",
+    "scale-offloaded",
+    "fp8-named-residual",
+})
+
+_active: set = set()
+
+
+def _check(name: str) -> str:
+    if name not in KNOWN:
+        raise ValueError(f"unknown mutation {name!r}; known: {sorted(KNOWN)}")
+    return name
+
+
+def active(name: str) -> bool:
+    return name in _active
+
+
+def enable(name: str) -> None:
+    _active.add(_check(name))
+
+
+def disable(name: str) -> None:
+    _active.discard(name)
+
+
+def reset() -> None:
+    _active.clear()
+
+
+@contextmanager
+def seeded(name: str):
+    """Enable one mutation for the duration of a block (test scaffolding)."""
+    enable(name)
+    try:
+        yield
+    finally:
+        disable(name)

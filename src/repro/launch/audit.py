@@ -1,0 +1,82 @@
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+"""CLI for the trace-time contract auditor (DESIGN.md §17).
+
+Audits plan cells WITHOUT running them: each cell's real step functions are
+traced over ShapeDtypeStructs and the offload/pipeline dataflow contracts
+R1-R5 are proven on the jaxpr.  The audit-gate CI job runs the full sweep
+over benchmarks/budgets.json — every train gate at its own pp and at pp=1,
+plus the serve gate's prefill — and uploads the JSON findings report.
+
+  PYTHONPATH=src python -m repro.launch.audit --all [--out audit.json]
+  PYTHONPATH=src python -m repro.launch.audit --cell sppo-gpt-7b-reduced-pp2
+  PYTHONPATH=src python -m repro.launch.audit --cell <name> --pp 1
+  PYTHONPATH=src python -m repro.launch.audit --cell <name> --prefetch sync
+
+Exit status: 0 when every report is clean, 1 otherwise.  --prefetch sync is
+expected to fail (the sync exposure IS finding R3-overlap-hazard).
+"""
+import argparse
+import json
+import sys
+
+from repro.analysis import audit as aud
+from repro.analysis.report import format_report, reports_to_json
+
+
+def load_gates(path: str):
+    with open(path) as f:
+        return json.load(f)["gates"]
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--budgets", default="benchmarks/budgets.json")
+    ap.add_argument("--cell", default=None,
+                    help="audit one budgets.json gate by name")
+    ap.add_argument("--all", action="store_true",
+                    help="audit every gate (train gates at their own pp "
+                         "AND at pp=1; the serve gate's prefill cell)")
+    ap.add_argument("--pp", type=int, default=None,
+                    help="override the gate's pipeline depth (train gates)")
+    ap.add_argument("--prefetch", default=None, choices=["ahead", "sync"],
+                    help="override the reload placement (sync is the "
+                         "R3-overlap-hazard exposure and audits dirty)")
+    ap.add_argument("--out", default=None,
+                    help="write the machine-readable JSON report here")
+    args = ap.parse_args(argv)
+
+    gates = load_gates(args.budgets)
+    if args.cell is not None:
+        gates = [g for g in gates if g["name"] == args.cell]
+        if not gates:
+            ap.error(f"no gate named {args.cell!r} in {args.budgets}")
+    elif not args.all:
+        ap.error("pass --cell <name> or --all")
+
+    reports = []
+    for gate in gates:
+        if gate.get("kind") == "serve":
+            reports.append(aud.audit_gate(gate))
+            continue
+        pps = [args.pp] if args.pp is not None else sorted(
+            {gate["pp"], 1} if args.all else {gate["pp"]})
+        for pp in pps:
+            reports.append(aud.audit_gate(gate, pp=pp,
+                                          prefetch=args.prefetch))
+
+    for rep in reports:
+        print(format_report(rep))
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(reports_to_json(reports))
+    n_dirty = sum(not r.clean for r in reports)
+    print(f"audited {len(reports)} cell(s): "
+          f"{len(reports) - n_dirty} clean, {n_dirty} with findings")
+    return 1 if n_dirty else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -49,6 +49,7 @@ def build_params(cell, mesh):
     _, pspecs = SP.param_struct_and_specs(mdef, plan.pp, dims["data"],
                                           cell.dtype)
     shard = jax.tree_util.tree_map(lambda s: NamedSharding(mesh, s), pspecs)
+    # transfer-lint: ok (initial param placement onto the mesh)
     params = jax.tree_util.tree_map(jax.device_put, params, shard)
     return params, pspecs, shard
 
@@ -105,6 +106,12 @@ def main(argv=None):
                          "per step (DESIGN.md §2)")
     ap.add_argument("--msp-split", type=int, default=2,
                     help="sub-chunks per MSP ramp chunk")
+    ap.add_argument("--audit", action="store_true",
+                    help="statically audit the resolved cell before "
+                         "training (analysis/audit.py, DESIGN.md §17): "
+                         "trace the step over ShapeDtypeStructs and prove "
+                         "the offload/pipeline contracts R1-R5; exit 2 on "
+                         "any finding")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=20)
     ap.add_argument("--resume", default="none", choices=["none", "auto"])
@@ -159,6 +166,19 @@ def main(argv=None):
                  "pass --pp > 1 or a mesh/shape that maps to pp > 1")
     log.info("plan: %s  chunks=%s alphas=%s", cell.plan, cell.sched.lengths,
              [round(a, 3) for a in cell.alphas])
+
+    if args.audit:
+        # preflight contract audit (DESIGN.md §17): trace-only, so a broken
+        # offload/pipeline dataflow fails here before any memory is spent
+        from repro.analysis.audit import audit_cell
+        from repro.analysis.report import format_report
+
+        rep = audit_cell(cell, data_size=data_size, model_size=model_size,
+                         name=f"{args.arch}/cli_train")
+        print(format_report(rep))
+        if not rep.clean:
+            raise SystemExit(2)
+        log.info("audit clean: %s", ", ".join(rep.traces))
 
     params, pspecs, pshard = build_params(cell, mesh)
     opt_dtype = (jnp.bfloat16 if cell.plan.opt_dtype == "bfloat16"
@@ -216,6 +236,7 @@ def main(argv=None):
                     dtype=np.float32).astype(jnp.bfloat16
                                              if cell.dtype == jnp.bfloat16
                                              else np.float32)
+            # transfer-lint: ok (train batch staging onto the mesh)
             batch = {k: jax.device_put(v, bshard[k]) for k, v in batch.items()}
             meter.start()
             params, opt_state, metrics = step_fn(params, opt_state, batch)

@@ -29,6 +29,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ModelConfig, ParallelPlan, ShapeConfig
 from repro.core import costmodel as cm
+from repro.core import mutation
 from repro.core import offload as ofl
 from repro.core import partition as part
 from repro.core import schedule as sched_mod
@@ -296,9 +297,17 @@ def prefetch_chunk(cell: Cell, ctx: Ctx, *, alpha: float, names: tuple,
             checkpoint_name(hostmem.to_host(hostmem.to_transport(t, codec),
                                             kind), off_name)
             for t in off_acts)
+        if mutation.active("double-d2h"):
+            off_host = tuple(hostmem.to_host(t, kind) for t in off_host)
         keep_dev = tuple(checkpoint_name(t, keep_name) for t in keep_acts)
-        scale_dev = tuple(
-            checkpoint_name(s, ofl.scale_name_for(off_name)) for s in scales)
+        if mutation.active("scale-offloaded"):
+            scales = tuple(hostmem.to_host(s, kind) for s in scales)
+        if mutation.active("unnamed-scale"):
+            scale_dev = tuple(scales)
+        else:
+            scale_dev = tuple(
+                checkpoint_name(s, ofl.scale_name_for(off_name))
+                for s in scales)
         return y, s2, aux, off_host, keep_dev, scale_dev
 
     @jax.custom_vjp
@@ -559,8 +568,10 @@ def run_pipeline(cell: Cell, ctx: Ctx, stage_p, g, tokens, labels, context,
                 offload_mode=plan.offload_mode,
                 offload_dtype=plan.offload_dtype if with_loss else "none")
         # drop warmup/drain rewrites (see the block comment above)
-        state = jax.tree_util.tree_map(
-            lambda old, new: jnp.where(valid, new, old), prev_state, state)
+        if not mutation.active("drain-tick-write"):
+            state = jax.tree_util.tree_map(
+                lambda old, new: jnp.where(valid, new, old),
+                prev_state, state)
         if ledger is not None:
             from repro.runtime import memledger as _ml
             x_out = _ml.tick_probe(x_out, ledger, t)
@@ -958,6 +969,7 @@ def make_pool_state(cell: Cell, geo, mesh):
     spec = P("data", None, None, None, None)
 
     def arr():
+        # transfer-lint: ok (pool init placement, device memory only)
         return jax.device_put(jnp.zeros(shape, cell.dtype),
                               jax.sharding.NamedSharding(mesh, spec))
 

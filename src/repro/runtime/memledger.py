@@ -120,64 +120,16 @@ tick_probe.defvjp(_probe_fwd, _probe_bwd)
 # ---------------------------------------------------------------------------
 
 
-# Bit widths of the sub-byte ml_dtypes: numpy's ``dtype.itemsize`` reports
-# a full byte for them (storage is byte-padded per *element* only in plain
-# numpy arrays — packed XLA buffers hold 2 int4s per byte), so itemsize*8
-# would double-count every int4/fp4 tensor.  Anything not listed really is
-# itemsize*8 bits.
-_DTYPE_BITS = {
-    "int2": 2, "uint2": 2,
-    "int4": 4, "uint4": 4,
-    "float4_e2m1fn": 4,
-}
+# The traversal itself lives in analysis/dataflow.py (DESIGN.md §17) — one
+# shared walker serves the ledger's byte/copy accounting and the static
+# contract auditor.  The underscore aliases are kept because the honesty
+# tests reach for them when sizing expected buffers.
+from repro.analysis import dataflow as _df  # noqa: E402
 
-
-def _aval_elems(aval) -> int:
-    try:
-        size = 1
-        for s in aval.shape:
-            size *= int(s)
-        return size
-    except Exception:  # pragma: no cover - abstract tokens etc.
-        return 0
-
-
-def _aval_bytes(aval) -> int:
-    try:
-        bits = _DTYPE_BITS.get(aval.dtype.name, aval.dtype.itemsize * 8)
-        return (_aval_elems(aval) * bits + 7) // 8
-    except Exception:  # pragma: no cover - abstract tokens etc.
-        return 0
-
-
-def _walk(jaxpr, mult: int, out: Dict[str, int],
-          elems: Optional[Dict[str, int]] = None) -> None:
-    for eqn in jaxpr.eqns:
-        if eqn.primitive.name == "name":
-            nm = eqn.params.get("name", "")
-            out[nm] = out.get(nm, 0) + mult * sum(
-                _aval_bytes(v.aval) for v in eqn.invars)
-            if elems is not None:
-                elems[nm] = elems.get(nm, 0) + mult * sum(
-                    _aval_elems(v.aval) for v in eqn.invars)
-            continue
-        m = mult
-        if eqn.primitive.name == "scan":
-            m = mult * int(eqn.params.get("length", 1))
-        for v in eqn.params.values():
-            for sub in _sub_jaxprs(v):
-                _walk(sub, m, out, elems)
-
-
-def _sub_jaxprs(v):
-    core = jax.core
-    if isinstance(v, core.ClosedJaxpr):
-        yield v.jaxpr
-    elif isinstance(v, core.Jaxpr):
-        yield v
-    elif isinstance(v, (list, tuple)):
-        for item in v:
-            yield from _sub_jaxprs(item)
+_DTYPE_BITS = _df.DTYPE_BITS
+_aval_elems = _df.aval_elems
+_aval_bytes = _df.aval_bytes
+_sub_jaxprs = _df.sub_jaxprs
 
 
 def tagged_bytes_from_jaxpr(closed_jaxpr) -> Dict[str, Dict[str, int]]:
@@ -193,9 +145,7 @@ def tagged_bytes_from_jaxpr(closed_jaxpr) -> Dict[str, Dict[str, int]]:
     the activation itemsize) independent of the transport dtype.  "scale"
     is the device-resident per-row codec scales (``act_scale@…``), zero on
     uncompressed plans."""
-    raw: Dict[str, int] = {}
-    elems: Dict[str, int] = {}
-    _walk(closed_jaxpr.jaxpr, 1, raw, elems)
+    raw, elems = _df.walk_named(closed_jaxpr)
     per: Dict[str, Dict[str, int]] = {}
     bases = ((ofl.OFF_NAME, "off"), (ofl.KEEP_NAME, "keep"),
              (ofl.SCALE_NAME, "scale"))
@@ -225,8 +175,7 @@ def moment_bytes_from_jaxpr(closed_jaxpr) -> Dict[str, object]:
     exact accounting, not an estimate."""
     from repro.optim.adamw import OPT_M_NAME, OPT_V_NAME
 
-    raw: Dict[str, int] = {}
-    _walk(closed_jaxpr.jaxpr, 1, raw)
+    raw, _ = _df.walk_named(closed_jaxpr)
     leaves = {nm: b for nm, b in raw.items()
               if nm.startswith(OPT_M_NAME + "@")
               or nm.startswith(OPT_V_NAME + "@")}
@@ -242,26 +191,14 @@ def moment_bytes_from_jaxpr(closed_jaxpr) -> Dict[str, object]:
             "leaves": leaves, "scale_leaves": scales}
 
 
-def _walk_device_puts(jaxpr, out: Dict[str, int]) -> None:
-    for eqn in jaxpr.eqns:
-        if eqn.primitive.name == "device_put":
-            for dev in eqn.params.get("devices", ()):
-                kind = getattr(dev, "memory_kind", None)
-                if kind is not None:
-                    out[kind] = out.get(kind, 0) + 1
-        for v in eqn.params.values():
-            for sub in _sub_jaxprs(v):
-                _walk_device_puts(sub, out)
-
-
 def device_put_kinds(closed_jaxpr) -> Dict[str, int]:
     """{memory_kind: count} of explicit ``device_put`` equations in a
     traced program — ``counts["device"]`` is the H2D copies, host kinds
     are the D2H side.  The explicit moments path must show exactly one H2D
-    per moment leaf per step (the one-copy contract, DESIGN.md §11)."""
-    out: Dict[str, int] = {}
-    _walk_device_puts(closed_jaxpr.jaxpr, out)
-    return out
+    per moment leaf per step (the one-copy contract, DESIGN.md §11).
+    Equations are counted once regardless of scan nesting (per-step
+    contract accounting, not per-execution)."""
+    return _df.walk_device_puts(closed_jaxpr)
 
 
 def init_moment_device_bytes(params, opt_dtype, *, offload_moments: bool,
@@ -686,6 +623,51 @@ def _drain_callbacks() -> None:
         barrier()
 
 
+def step_fn(cell, *, data_size: int, model_size: int, ledger=None,
+            with_grad: bool = True):
+    """Just the shard_map'd step function of ``build_step`` — no argument
+    arrays are created, so the static auditor (analysis/audit.py) can
+    ``jax.make_jaxpr`` it over ShapeDtypeStructs without allocating."""
+    from jax.sharding import PartitionSpec as P
+
+    from repro.launch.mesh import compat_make_mesh
+    from repro.parallel.runner import (_in_specs_for_params, batch_struct,
+                                       run_pipeline, shard_map)
+
+    mesh = compat_make_mesh((data_size, model_size), ("data", "model"))
+    pspecs = _in_specs_for_params(cell)
+    _, bspecs = batch_struct(cell)
+
+    def body(stage_p, g, b):
+        ctx = cell.ctx()
+        stage_p = jax.tree_util.tree_map(
+            lambda a: a.reshape(a.shape[1:]), stage_p)
+        tok = b["tokens"].reshape(b["tokens"].shape[2:])
+        lab = b["labels"].reshape(b["labels"].shape[2:])
+        ds = (b["doc_start"].reshape(b["doc_start"].shape[2:])
+              if "doc_start" in b else None)
+
+        def loss(stage_p, g):
+            out = run_pipeline(cell, ctx, stage_p, g, tok, lab,
+                               None, with_loss=True, ledger=ledger,
+                               doc_start=ds)
+            num = ctx.psum_loss_all(out["loss"])
+            den = ctx.psum_loss_all(out["denom"])
+            return num / jnp.maximum(den, 1.0)
+
+        if with_grad:
+            l, gr = jax.value_and_grad(loss, argnums=(0, 1))(stage_p, g)
+            gs = jax.tree_util.tree_map(lambda a: a[None],
+                                        ctx.psum_grads(gr[0]))
+            return l, gs
+        return (loss(stage_p, g),
+                jax.tree_util.tree_map(lambda a: a[None], stage_p))
+
+    return shard_map(body, mesh,
+                     in_specs=(pspecs["stages"], pspecs["globals"], bspecs),
+                     out_specs=(P(), pspecs["stages"]))
+
+
 def build_step(cell, *, data_size: int, model_size: int, tokens=None,
                labels=None, doc_start=None, seed: int = 0, ledger=None,
                with_grad: bool = True):
@@ -697,16 +679,10 @@ def build_step(cell, *, data_size: int, model_size: int, tokens=None,
     Returns ``(fn, (g_stage, globals, batch))``.  The measurement harness
     (``measure``), the memory-gate, and the honesty tests all build their
     executable here, so what the gate measures is by construction the same
-    program the tests assert on."""
-    from jax.sharding import PartitionSpec as P
-
-    from repro.launch.mesh import compat_make_mesh
-    from repro.parallel.runner import (_in_specs_for_params, batch_struct,
-                                       run_pipeline, shard_map)
-
+    program the tests assert on — and ``step_fn`` is the same program the
+    static auditor traces."""
     plan = cell.plan
     mdef, cfg = cell.mdef, cell.cfg
-    mesh = compat_make_mesh((data_size, model_size), ("data", "model"))
     key = jax.random.PRNGKey(seed)
     stages = [mdef.init_stage_params(key, s, plan.pp, cell.dtype)
               for s in range(plan.pp)]
@@ -742,37 +718,8 @@ def build_step(cell, *, data_size: int, model_size: int, tokens=None,
     if cell.varlen:
         assert doc_start is not None, "varlen cell needs a doc_start array"
         batch["doc_start"] = lay(jnp.asarray(doc_start))
-    pspecs = _in_specs_for_params(cell)
-    _, bspecs = batch_struct(cell)
-
-    def body(stage_p, g, b):
-        ctx = cell.ctx()
-        stage_p = jax.tree_util.tree_map(
-            lambda a: a.reshape(a.shape[1:]), stage_p)
-        tok = b["tokens"].reshape(b["tokens"].shape[2:])
-        lab = b["labels"].reshape(b["labels"].shape[2:])
-        ds = (b["doc_start"].reshape(b["doc_start"].shape[2:])
-              if "doc_start" in b else None)
-
-        def loss(stage_p, g):
-            out = run_pipeline(cell, ctx, stage_p, g, tok, lab,
-                               None, with_loss=True, ledger=ledger,
-                               doc_start=ds)
-            num = ctx.psum_loss_all(out["loss"])
-            den = ctx.psum_loss_all(out["denom"])
-            return num / jnp.maximum(den, 1.0)
-
-        if with_grad:
-            l, gr = jax.value_and_grad(loss, argnums=(0, 1))(stage_p, g)
-            gs = jax.tree_util.tree_map(lambda a: a[None],
-                                        ctx.psum_grads(gr[0]))
-            return l, gs
-        return (loss(stage_p, g),
-                jax.tree_util.tree_map(lambda a: a[None], stage_p))
-
-    fn = shard_map(body, mesh,
-                   in_specs=(pspecs["stages"], pspecs["globals"], bspecs),
-                   out_specs=(P(), pspecs["stages"]))
+    fn = step_fn(cell, data_size=data_size, model_size=model_size,
+                 ledger=ledger, with_grad=with_grad)
     return fn, (g_stage, gl, batch)
 
 
@@ -876,6 +823,7 @@ def _measure_opt(cell, ledger: MemLedger, params, grads) -> None:
     # co-locate the params so the update runs on the same device set, as
     # the real train_step's optimizer does
     params = jax.tree_util.tree_map(
+        # transfer-lint: ok (device->device re-shard, no host copy)
         lambda p, g: jax.device_put(p, g.sharding), params, grads)
     moments_dtype = getattr(plan, "moments_dtype", "none")
     state = adamw.init_state(params, opt_dtype,

@@ -1,0 +1,31 @@
+"""Seeded mutant corpus for the trace-time contract auditor.
+
+Each module re-introduces one historical regression class (or a known-bad
+plan configuration) and names the finding id the auditor MUST emit for it.
+The actual code mutations live behind ``repro.core.mutation`` switches at
+the exact seams the original bugs occupied; plan-level mutants (sync
+reload) need no code switch — the bad configuration IS the mutant.
+
+tests/test_audit.py parametrizes over ``MUTANTS``: for every case it audits
+the small pp=2 cell with the mutation seeded and asserts the expected
+finding id is present (other findings may legitimately ride along — e.g.
+the sync mutant also breaks the R1 H2D count, because remat replays the
+reload equations).
+"""
+from mutants import (
+    double_d2h,
+    drain_tick_write,
+    fp8_named_residual,
+    scale_offloaded,
+    sync_reload,
+    unnamed_scale,
+)
+
+MUTANTS = [
+    drain_tick_write.CASE,
+    sync_reload.CASE,
+    double_d2h.CASE,
+    unnamed_scale.CASE,
+    fp8_named_residual.CASE,
+    scale_offloaded.CASE,
+]

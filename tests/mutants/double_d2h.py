@@ -1,0 +1,15 @@
+"""Duplicate offload copy: the one-copy D2H contract broken.
+
+The capture seam must issue exactly one host ``device_put`` per tagged
+offload site per step.  This mutant (switch in ``runner.prefetch_chunk``'s
+capture) re-runs ``hostmem.to_host`` on the already-offloaded rows,
+doubling the D2H equation count — the auditor's R1 rule compares host-kind
+puts against the capture-pair count and flags the mismatch.
+"""
+CASE = dict(
+    name="double-d2h",
+    mutation="double-d2h",
+    overrides={},
+    prefetch=None,
+    expected_id="R1-d2h-count",
+)

@@ -1,0 +1,16 @@
+"""The pp>1 drain-tick clobber (the prefill KV-cache corruption bug).
+
+The lock-step pp schedule runs warmup/drain ticks whose outputs are
+garbage for some stages; the fix guards every pipeline-state carry with
+``jnp.where(valid, new, old)`` on the tick-validity predicate.  This
+mutant (``repro.core.mutation`` switch in ``runner.prefill``'s tick loop)
+drops that select, re-introducing the raw overwrite — the auditor's R4
+walk finds the state outvar produced by a non-select equation.
+"""
+CASE = dict(
+    name="drain-tick-write",
+    mutation="drain-tick-write",
+    overrides={},
+    prefetch=None,
+    expected_id="R4-unmasked-state",
+)

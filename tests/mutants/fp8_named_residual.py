@@ -1,0 +1,17 @@
+"""Raw inexact wire dtype named as a residual inside the remat scope.
+
+The quantized host channel transports fp8 payloads bitcast to an int8
+byte container; naming the raw float8 array as an ``act_off@`` residual
+inside a sequential scope means autodiff saves an inexact-dtype value
+whose gradient path XLA may silently decompose (the PR 7 trap in its
+other costume).  This mutant (switch in ``offload.host_round_trip``)
+skips the bitcast; combined with ``prefetch="sync"`` the named fp8
+payload lands inside the remat scope where R5-inexact-residual looks.
+"""
+CASE = dict(
+    name="fp8-named-residual",
+    mutation="fp8-named-residual",
+    overrides={"offload_dtype": "fp8"},
+    prefetch="sync",
+    expected_id="R5-inexact-residual",
+)

@@ -1,0 +1,17 @@
+"""The synchronous-reload exposure (plan-level mutant, no code switch).
+
+``prefetch="sync"`` leaves every H2D reload where autodiff places it: at
+the consuming chunk's own backward, inside the remat scope — the copy
+serializes with the compute it feeds instead of overlapping the previous
+chunk (the stall SPPO's one-chunk-ahead seam exists to remove).  The
+auditor flags every such in-scope H2D as R3-overlap-hazard; R1-h2d-count
+fires alongside, because remat replays the reload equations (2x H2D per
+offload site in the trace).
+"""
+CASE = dict(
+    name="sync-reload",
+    mutation=None,
+    overrides={},
+    prefetch="sync",
+    expected_id="R3-overlap-hazard",
+)

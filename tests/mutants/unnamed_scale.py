@@ -1,0 +1,17 @@
+"""Codec scale dropped from the residual naming (the PR 7 NaN trap class).
+
+On a quantized offload plan every fp8 payload needs its fp32 per-row
+scale reachable in the trace under ``act_scale@<site>`` — lose the scale
+and the dequantize multiplies by garbage (historically: silent NaNs a
+thousand steps in).  This mutant (switch in ``runner.prefetch_chunk``)
+skips the ``checkpoint_name`` on the scale rows, so the payload pairing
+has no named scale — the auditor's R5-codec-pairing rule flags the
+orphaned ``act_off@`` site.
+"""
+CASE = dict(
+    name="unnamed-scale",
+    mutation="unnamed-scale",
+    overrides={"offload_dtype": "fp8"},
+    prefetch=None,
+    expected_id="R5-codec-pairing",
+)

@@ -1,0 +1,192 @@
+"""Trace-time contract auditor suite (analysis/audit.py, DESIGN.md §17).
+
+Two halves, both allocation-free (make_jaxpr / eval_shape only):
+
+  * the seeded mutant corpus (tests/mutants/) — each case re-introduces a
+    historical regression via a ``repro.core.mutation`` switch (or a
+    known-bad plan) and the auditor MUST emit the documented finding id;
+  * the clean sweep — every benchmarks/budgets.json cell, at its own pp
+    and at pp=1, audits with zero findings, and the R1 counters agree
+    with the runtime ledger's ``device_put_kinds`` on the same trace.
+
+Marked ``audit`` and run in the audit-gate CI leg, not per kernel backend.
+"""
+import json
+import os
+
+import pytest
+
+from mutants import MUTANTS
+
+pytestmark = pytest.mark.audit
+
+_BUDGETS = os.path.join(os.path.dirname(__file__), os.pardir,
+                        "benchmarks", "budgets.json")
+
+
+def _gates():
+    with open(_BUDGETS) as f:
+        return json.load(f)["gates"]
+
+
+def _base_gate():
+    return next(g for g in _gates() if g["name"] == "sppo-gpt-7b-reduced-pp2")
+
+
+def _small_gate(**overrides):
+    """The mutant-corpus cell: the base budget gate shrunk to trace fast."""
+    g = dict(_base_gate(), seq=128, batch=2, data_size=2, model_size=2)
+    g.update(overrides)
+    return g
+
+
+# ---------------------------------------------------------------------------
+# Mutant corpus: every seeded regression must be flagged by its documented id
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("case", MUTANTS, ids=[c["name"] for c in MUTANTS])
+def test_mutant_flagged(case):
+    from repro.analysis import audit as aud
+    from repro.core import mutation
+
+    gate = _small_gate(**case["overrides"])
+    if case["mutation"] is None:
+        rep = aud.audit_gate(gate, pp=gate["pp"], prefetch=case["prefetch"])
+    else:
+        with mutation.seeded(case["mutation"]):
+            rep = aud.audit_gate(gate, pp=gate["pp"],
+                                 prefetch=case["prefetch"])
+    assert rep.error is None, rep.error
+    ids = rep.finding_ids()
+    # the documented finding must be present; collateral findings may ride
+    # along (e.g. sync reload also doubles the traced H2D count)
+    assert case["expected_id"] in ids, (case["name"], ids)
+
+
+def test_mutation_seeded_restores():
+    from repro.core import mutation
+
+    assert not mutation.active("double-d2h")
+    with mutation.seeded("double-d2h"):
+        assert mutation.active("double-d2h")
+    assert not mutation.active("double-d2h")
+    with pytest.raises(ValueError):
+        mutation.enable("not-a-known-mutation")
+
+
+# ---------------------------------------------------------------------------
+# Clean sweep: every budget cell, pp grid, zero findings
+# ---------------------------------------------------------------------------
+
+
+def _sweep_params():
+    params = []
+    for g in _gates():
+        if g.get("kind") == "serve":
+            params.append(pytest.param(g, None, id=g["name"]))
+            continue
+        for pp in sorted({1, g["pp"]}):
+            params.append(pytest.param(g, pp, id=f"{g['name']}@pp{pp}"))
+    return params
+
+
+@pytest.mark.parametrize("gate,pp", _sweep_params())
+def test_budget_cell_clean(gate, pp):
+    from repro.analysis import audit as aud
+
+    rep = aud.audit_gate(gate, pp=pp)
+    assert rep.error is None, rep.error
+    assert rep.clean, [str(f) for f in rep.findings]
+    if gate.get("kind") != "serve":
+        # a clean train report must document the contract it proved
+        assert rep.counters["train-grad.d2h"] == rep.counters["train-grad.h2d"]
+        assert rep.counters["train-grad.offload_sites"] > 0
+
+
+def test_small_cell_clean_both_pp():
+    from repro.analysis import audit as aud
+
+    for pp in (1, 2):
+        rep = aud.audit_gate(_small_gate(), pp=pp)
+        assert rep.error is None, rep.error
+        assert rep.clean, (pp, [str(f) for f in rep.findings])
+
+
+# ---------------------------------------------------------------------------
+# R1 cross-check: auditor counters == runtime ledger's device_put census
+# ---------------------------------------------------------------------------
+
+
+def test_r1_counters_match_memledger():
+    import jax
+
+    from repro.analysis import audit as aud
+    from repro.runtime import hostmem
+    from repro.runtime import memledger as ml
+
+    gate = _small_gate()
+    cell, data_size, model_size = aud.resolve_gate_cell(gate, pp=2)
+    rep = aud.audit_cell(cell, data_size=data_size, model_size=model_size,
+                         name="crosscheck")
+    assert rep.clean, [str(f) for f in rep.findings]
+
+    fn = ml.step_fn(cell, data_size=data_size, model_size=model_size,
+                    with_grad=True)
+    import repro.parallel.specs as SP
+    from repro.parallel import runner
+
+    g_stage = SP.stage_struct(cell.mdef, cell.plan.pp, cell.data_size,
+                              cell.dtype)
+    gl = SP.globals_struct(cell.mdef, cell.dtype)
+    bstruct, _ = runner.batch_struct(cell)
+    cjx = jax.make_jaxpr(fn)(g_stage, gl, bstruct)
+    kinds = ml.device_put_kinds(cjx)
+    host = sum(n for k, n in kinds.items() if k != hostmem.DEVICE_KIND)
+    assert host == rep.counters["train-grad.d2h"]
+    assert kinds.get(hostmem.DEVICE_KIND, 0) == rep.counters["train-grad.h2d"]
+
+
+# ---------------------------------------------------------------------------
+# Wiring: the CLI and the train.py preflight
+# ---------------------------------------------------------------------------
+
+
+def test_cli_clean_cell_exits_zero(tmp_path, capsys):
+    from repro.launch import audit as cli
+
+    out = tmp_path / "report.json"
+    rc = cli.main(["--cell", "sppo-gpt-7b-reduced-pp2", "--pp", "1",
+                   "--out", str(out)])
+    assert rc == 0
+    blob = json.loads(out.read_text())
+    assert blob["schema"] == "repro-audit-report/1"
+    assert blob["clean"] is True
+    assert len(blob["reports"]) == 1
+    assert capsys.readouterr().out.count("ok —") == 1
+
+
+def test_cli_sync_override_exits_nonzero(tmp_path):
+    from repro.launch import audit as cli
+
+    out = tmp_path / "report.json"
+    rc = cli.main(["--cell", "sppo-gpt-7b-reduced-pp2", "--pp", "1",
+                   "--prefetch", "sync", "--out", str(out)])
+    assert rc == 1
+    blob = json.loads(out.read_text())
+    assert blob["clean"] is False
+    ids = [f["id"] for r in blob["reports"] for f in r["findings"]]
+    assert "R3-overlap-hazard" in ids
+
+
+def test_train_audit_preflight_blocks_mutant():
+    from repro.core import mutation
+    from repro.launch import train
+
+    argv = ["--arch", "sppo-gpt-7b", "--reduced", "--seq", "256",
+            "--batch", "2", "--mesh", "1x1", "--n-chunks", "4",
+            "--steps", "0", "--audit"]
+    with mutation.seeded("double-d2h"):
+        with pytest.raises(SystemExit) as exc:
+            train.main(argv)
+    assert exc.value.code == 2

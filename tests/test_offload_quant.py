@@ -458,6 +458,7 @@ def test_compressed_moments_init_with_last_axis_sharded_params(eight_devices):
     if kind is None:
         pytest.skip("backend has no host memory kind")
     mesh = make_test_mesh(4, 2)
+    # transfer-lint: ok (test fixture, device placement only)
     p = jax.device_put(jnp.ones((64, 32), jnp.float32),
                        NamedSharding(mesh, P(None, "model")))
     state = adamw.init_state({"w": p}, jnp.float32, offload_moments=True,

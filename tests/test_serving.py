@@ -150,6 +150,7 @@ def test_prefill_decode_cache_contract(pp):
         _, bspecs = batch_struct(cell)
         tok = np.stack([toks] * data_size)[None]
         batch = {"tokens": jnp.asarray(tok), "labels": jnp.asarray(tok)}
+        # transfer-lint: ok (test input staging onto the mesh)
         batch = {k: jax.device_put(v, NamedSharding(mesh, bspecs[k]))
                  for k, v in batch.items() if k in bspecs}
         return jax.jit(fn)(params, batch)
